@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints CSV rows:  name,us_per_call,derived
+where ``us_per_call`` is the wall-clock microseconds of the measured call
+and ``derived`` is the benchmark's headline metric (throughput, joules, ...).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.types import (CHAMELEON, CLOUDLAB, DIDCLAB, LARGE_FILES,
+                              MEDIUM_FILES, MIXED, SMALL_FILES)
+
+DATASETS = {
+    "small": (SMALL_FILES,),
+    "medium": (MEDIUM_FILES,),
+    "large": (LARGE_FILES,),
+    "mixed": MIXED,
+}
+
+TESTBEDS = {
+    "chameleon": CHAMELEON,
+    "cloudlab": CLOUDLAB,
+    "didclab": DIDCLAB,
+}
+
+
+def timed(fn, *args, **kwargs):
+    """Returns (result, seconds). jax results are block_until_ready'd."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return out, time.perf_counter() - t0
+
+
+def emit(name: str, seconds: float, derived) -> str:
+    row = f"{name},{seconds * 1e6:.0f},{derived}"
+    print(row, flush=True)
+    return row

@@ -1,0 +1,71 @@
+"""Paper Figure 2: throughput + energy of every tool across the 3 testbeds
+and 4 datasets (small / medium / large / mixed).
+
+Rows: fig2/<testbed>/<dataset>/<tool>, derived = "<gbps>Gbps;<J>J".
+"""
+from __future__ import annotations
+
+from repro.core import SLA, SLAPolicy, CpuProfile, simulate
+from repro.core.baselines import BASELINE_BUILDERS
+
+from .common import DATASETS, TESTBEDS, emit, timed
+
+CPU = CpuProfile()
+
+TOOLS = ("wget/curl", "http/2", "ismail-min-energy", "ismail-max-tput",
+         "ME", "EEMT")
+
+
+def run_one(testbed: str, dataset: str, tool: str):
+    prof = TESTBEDS[testbed]
+    specs = DATASETS[dataset]
+    budget = 28800.0 if prof.bandwidth_mbps < 500 else 7200.0
+    if tool in BASELINE_BUILDERS:
+        ctrl = BASELINE_BUILDERS[tool](specs, prof, CPU)
+        r, secs = timed(simulate, prof, CPU, specs, ctrl, total_s=budget)
+    else:
+        pol = SLAPolicy.MIN_ENERGY if tool == "ME" else SLAPolicy.MAX_THROUGHPUT
+        r, secs = timed(simulate, prof, CPU, specs,
+                        SLA(policy=pol, max_ch=64), total_s=budget)
+    return r, secs
+
+
+def run(rows=None):
+    results = {}
+    for tb in TESTBEDS:
+        for ds in DATASETS:
+            for tool in TOOLS:
+                r, secs = run_one(tb, ds, tool)
+                tag = f"fig2/{tb}/{ds}/{tool}"
+                emit(tag, secs,
+                     f"{r.avg_tput_gbps:.3f}Gbps;{r.energy_j:.0f}J;"
+                     f"done={int(r.completed)}")
+                results[(tb, ds, tool)] = r
+                if rows is not None:
+                    rows.append((tag, r))
+    return results
+
+
+def headline(results) -> dict:
+    """The paper's headline comparisons on the mixed dataset."""
+    out = {}
+    for tb in TESTBEDS:
+        me = results[(tb, "mixed", "ME")]
+        imin = results[(tb, "mixed", "ismail-min-energy")]
+        eemt = results[(tb, "mixed", "EEMT")]
+        imax = results[(tb, "mixed", "ismail-max-tput")]
+        out[tb] = {
+            "me_energy_reduction_pct":
+                100.0 * (1 - me.energy_j / imin.energy_j),
+            "eemt_tput_gain_pct":
+                100.0 * (eemt.avg_tput_gbps / imax.avg_tput_gbps - 1),
+            "eemt_energy_reduction_pct":
+                100.0 * (1 - eemt.energy_j / imax.energy_j),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    res = run()
+    print(json.dumps(headline(res), indent=2))

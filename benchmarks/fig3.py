@@ -1,0 +1,41 @@
+"""Paper Figure 3: target-throughput algorithms (EETT vs Ismail et al.) at
+80/60/40/20% of the theoretical bandwidth on Chameleon + CloudLab, mixed
+dataset.  DIDCLab is excluded as in the paper (low bandwidth).
+
+Rows: fig3/<testbed>/<target-frac>/<algo>.
+"""
+from __future__ import annotations
+
+from repro.core import MIXED, SLA, SLAPolicy, CpuProfile, simulate
+
+from .common import TESTBEDS, emit, timed
+
+CPU = CpuProfile()
+FRACS = (0.8, 0.6, 0.4, 0.2)
+
+
+def run(rows=None):
+    results = {}
+    for tb in ("chameleon", "cloudlab"):
+        prof = TESTBEDS[tb]
+        for frac in FRACS:
+            tgt = prof.bandwidth_mbps * frac
+            for pol, name in ((SLAPolicy.TARGET_THROUGHPUT, "EETT"),
+                              (SLAPolicy.ISMAIL_TARGET, "ismail-target")):
+                sla = SLA(policy=pol, target_tput_mbps=tgt, max_ch=64)
+                r, secs = timed(simulate, prof, CPU, MIXED, sla,
+                                total_s=28800.0 if prof.bandwidth_mbps < 500
+                                else 7200.0)
+                err = abs(r.avg_tput_mbps - tgt) / tgt
+                tag = f"fig3/{tb}/{int(frac * 100)}pct/{name}"
+                emit(tag, secs,
+                     f"{r.avg_tput_gbps:.3f}Gbps;target_err={err:.2f};"
+                     f"{r.energy_j:.0f}J")
+                results[(tb, frac, name)] = r
+                if rows is not None:
+                    rows.append((tag, r))
+    return results
+
+
+if __name__ == "__main__":
+    run()

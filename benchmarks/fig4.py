@@ -1,0 +1,59 @@
+"""Paper Figure 4: effect of frequency/core scaling on client energy —
+ME and EEMT with and without the Algorithm-3 load-control module, vs the
+Alan/Ismail static tuners, mixed dataset, all 3 testbeds.
+
+Rows: fig4/<testbed>/<algo>[-noscale].
+"""
+from __future__ import annotations
+
+from repro.core import MIXED, SLA, SLAPolicy, CpuProfile, simulate
+from repro.core.baselines import BASELINE_BUILDERS
+
+from .common import TESTBEDS, emit, timed
+
+CPU = CpuProfile()
+
+
+def run(rows=None):
+    results = {}
+    for tb, prof in TESTBEDS.items():
+        budget = 28800.0 if prof.bandwidth_mbps < 500 else 7200.0
+        for pol, name in ((SLAPolicy.MIN_ENERGY, "ME"),
+                          (SLAPolicy.MAX_THROUGHPUT, "EEMT")):
+            for scaling in (True, False):
+                sla = SLA(policy=pol, max_ch=64)
+                r, secs = timed(simulate, prof, CPU, MIXED, sla,
+                                total_s=budget, scaling=scaling)
+                tag = f"fig4/{tb}/{name}{'' if scaling else '-noscale'}"
+                emit(tag, secs, f"{r.energy_j:.0f}J;{r.avg_tput_gbps:.3f}Gbps")
+                results[(tb, name, scaling)] = r
+                if rows is not None:
+                    rows.append((tag, r))
+        for base in ("ismail-min-energy", "ismail-max-tput"):
+            ctrl = BASELINE_BUILDERS[base](MIXED, prof, CPU)
+            r, secs = timed(simulate, prof, CPU, MIXED, ctrl, total_s=budget)
+            tag = f"fig4/{tb}/{base}"
+            emit(tag, secs, f"{r.energy_j:.0f}J;{r.avg_tput_gbps:.3f}Gbps")
+            results[(tb, base, None)] = r
+            if rows is not None:
+                rows.append((tag, r))
+    return results
+
+
+def scaling_contribution(results) -> dict:
+    """Extra energy cut contributed by Algorithm 3 (paper: ~17-19%)."""
+    out = {}
+    for tb in TESTBEDS:
+        out[tb] = {
+            "ME_extra_pct": 100.0 * (1 - results[(tb, "ME", True)].energy_j
+                                     / results[(tb, "ME", False)].energy_j),
+            "EEMT_extra_pct": 100.0 * (1 - results[(tb, "EEMT", True)].energy_j
+                                       / results[(tb, "EEMT", False)].energy_j),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    res = run()
+    print(json.dumps(scaling_contribution(res), indent=2))

@@ -1,0 +1,134 @@
+"""Microbenchmarks: engine throughput, vmap sweep scaling, kernel timings.
+
+These measure the FRAMEWORK itself (CPU wall time; the kernels run in
+interpret mode, so their numbers are correctness-path timings, not TPU
+performance — TPU projections live in the roofline analysis).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CHAMELEON, MIXED, SLA, SLAPolicy, CpuProfile, simulate
+
+from .common import emit
+
+CPU = CpuProfile()
+
+
+def bench_engine(rows=None):
+    """One full simulated transfer (jit warm) — engine steps/second."""
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
+    simulate(CHAMELEON, CPU, MIXED, sla, total_s=600.0)      # warm
+    t0 = time.perf_counter()
+    n = 3
+    for _ in range(n):
+        simulate(CHAMELEON, CPU, MIXED, sla, total_s=600.0)
+    dt = (time.perf_counter() - t0) / n
+    steps = 6000
+    emit("micro/engine_transfer", dt, f"{steps / dt:.0f}steps_per_s")
+
+
+def bench_vmap_sweep(rows=None):
+    """Parameter sweep via vmap: K simultaneous simulations in one XLA call
+    (the JAX-native replacement for the paper's sequential experiments)."""
+    from repro.core import engine, heuristics, network_model, tuners
+    from repro.core.types import TransferParams
+
+    K = 64
+    n_steps = 2000
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
+    params, chunked = heuristics.initialize(MIXED, CHAMELEON, CPU, sla)
+    files = jnp.asarray([s.avg_file_mb for s in chunked])
+    totals = jnp.asarray([s.total_mb for s in chunked])
+
+    step = engine.make_step_fn(
+        CHAMELEON, CPU, sla, files, params.pp, params.par, dt=0.1,
+        ctrl_every=10, scaling=True, tuned=True)
+
+    def one(num_ch0):
+        sim0 = network_model.init_state(totals, CHAMELEON)
+        ts0 = tuners.init_tuner_state(num_ch0, 2, 1)
+        xs = (jnp.arange(n_steps, dtype=jnp.int32),
+              jnp.ones((n_steps,), jnp.float32))
+        (sim, ts), _ = jax.lax.scan(step, (sim0, ts0), xs)
+        return sim.energy_j
+
+    sweep = jax.jit(jax.vmap(one))
+    ch0 = jnp.linspace(1.0, 64.0, K)
+    sweep(ch0).block_until_ready()                            # warm
+    t0 = time.perf_counter()
+    sweep(ch0).block_until_ready()
+    dt = time.perf_counter() - t0
+    emit("micro/vmap_sweep_64cfg", dt,
+         f"{K * n_steps / dt:.0f}sim_steps_per_s")
+
+
+def bench_kernels(rows=None):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.rglru import rglru
+    from repro.kernels.rwkv6 import wkv
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, T, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, 2, hd))
+    v = jax.random.normal(ks[2], (B, T, 2, hd))
+
+    def run_fa():
+        return flash_attention(q, k, v, interpret=True)
+
+    run_fa()
+    t0 = time.perf_counter(); run_fa(); dt = time.perf_counter() - t0
+    flops = 2 * 2 * B * H * T * T * hd * 0.5
+    emit("micro/flash_attention_512", dt, f"{flops / dt / 1e9:.2f}GFLOPs_interp")
+
+    r = jax.random.normal(ks[0], (B, 128, H, hd)) * 0.4
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, 128, H, hd))) * 0.4 + 0.5
+    u = jax.random.normal(ks[4], (H, hd)) * 0.2
+    kk = jax.random.normal(ks[1], (B, 128, H, hd)) * 0.4
+    vv = jax.random.normal(ks[2], (B, 128, H, hd)) * 0.4
+    wkv(r, kk, vv, w, u, interpret=True)
+    t0 = time.perf_counter(); wkv(r, kk, vv, w, u, interpret=True)
+    emit("micro/wkv_128", time.perf_counter() - t0, "interp")
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 128, 512))) * 0.4 + 0.5
+    b = jax.random.normal(ks[1], (2, 128, 512)) * 0.1
+    rglru(a, b, interpret=True)
+    t0 = time.perf_counter(); rglru(a, b, interpret=True)
+    emit("micro/rglru_128", time.perf_counter() - t0, "interp")
+
+
+def bench_train_smoke(rows=None):
+    """Wall time of one smoke-model train step (jit warm)."""
+    from repro.configs import get_smoke_config
+    from repro.models import build
+    from repro.optim import AdamWConfig
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    bundle = build(cfg)
+    state = init_train_state(bundle, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(bundle, AdamWConfig()))
+    batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+             "labels": jnp.zeros((4, 64), jnp.int32)}
+    state, _ = step(state, batch)
+    jax.block_until_ready(state.params)
+    t0 = time.perf_counter()
+    state, m = step(state, batch)
+    jax.block_until_ready(state.params)
+    dt = time.perf_counter() - t0
+    emit("micro/train_step_smoke", dt, f"loss={float(m['loss']):.3f}")
+
+
+def run(rows=None):
+    bench_engine(rows)
+    bench_vmap_sweep(rows)
+    bench_kernels(rows)
+    bench_train_smoke(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Roofline table: aggregates the dry-run JSONs (experiments/dryrun/) into
+the per-(arch x shape x mesh) report used by EXPERIMENTS.md §Roofline.
+
+Rows: roofline/<arch>/<shape>/<mesh>, derived =
+      "<bottleneck>;compute=<s>;memory=<s>;collective=<s>;useful=<ratio>".
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_all(dirname: str = DRYRUN_DIR):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def run(rows=None):
+    cells = load_all()
+    if not cells:
+        print(f"# no dry-run artifacts in {DRYRUN_DIR} — run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return {}
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        t = r["roofline"]
+        emit(f"roofline/{arch}/{shape}/{mesh}", r.get("compile_s", 0.0),
+             f"{t['bottleneck']};compute={t['compute_s']:.2e};"
+             f"memory={t['memory_s']:.2e};collective={t['collective_s']:.2e};"
+             f"useful={r['useful_flops_ratio']:.3f};"
+             f"mem_gb={r['memory']['peak_per_device'] / 1e9:.1f}")
+    return cells
+
+
+def markdown_table(cells) -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | 6ND/HLO | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        t = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"{t['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['memory']['peak_per_device'] / 1e9:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    cells = run()
+    print()
+    print(markdown_table(cells))

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,fig4,micro,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark cell) and a
+summary of the paper's headline claims at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="fig2,fig3,fig4,micro,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(","))
+
+    print("name,us_per_call,derived")
+    summary = {}
+
+    if "fig2" in only:
+        from . import fig2
+        res = fig2.run()
+        summary["fig2_headline"] = fig2.headline(res)
+
+    if "fig3" in only:
+        from . import fig3
+        fig3.run()
+
+    if "fig4" in only:
+        from . import fig4
+        res4 = fig4.run()
+        summary["fig4_scaling_contribution"] = fig4.scaling_contribution(res4)
+
+    if "micro" in only:
+        from . import micro
+        micro.run()
+
+    if "roofline" in only:
+        from . import roofline
+        roofline.run()
+
+    if summary:
+        print("# summary", json.dumps(summary, indent=2), file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

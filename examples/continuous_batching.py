@@ -1,0 +1,47 @@
+"""Continuous-batching serving with SLA admission control.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+
+Twelve requests of mixed prompt lengths stream through a 4-slot batcher;
+the paper's controller governs how many slots are admitted (the serving
+analogue of transfer-channel concurrency).
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.types import SLA, SLAPolicy
+from repro.models import build
+from repro.serve import ContinuousBatcher, Request
+
+cfg = get_smoke_config("qwen2-0.5b")
+bundle = build(cfg)
+params = bundle.init_params(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+cb = ContinuousBatcher(
+    bundle, params, slots=4, max_len=96,
+    sla=SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=4, delta_ch=1,
+            timeout_s=0.25))
+
+reqs = [Request(i, rng.integers(0, cfg.vocab_size, int(rng.integers(4, 24)),
+                                dtype=np.int32), max_new=16)
+        for i in range(12)]
+for r in reqs:
+    cb.submit(r)
+
+t0 = time.perf_counter()
+steps = cb.run_until_drained(max_steps=2000)
+dt = time.perf_counter() - t0
+
+total = sum(len(r.out) for r in reqs)
+print(f"{len(reqs)} requests, {total} tokens in {dt:.1f}s "
+      f"({total / dt:.1f} tok/s) over {steps} decode steps; "
+      f"final admitted slots: {cb.admitted}")
+assert all(r.done for r in reqs)
+print("sample:", reqs[0].out[:8])

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's SLA tuners in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the mixed dataset (Table II) over the simulated Chameleon testbed
+(Table I) with every controller and prints the Fig.2-style comparison.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (CHAMELEON, MIXED, SLA, SLAPolicy, CpuProfile,
+                        simulate)
+from repro.core.baselines import BASELINE_BUILDERS
+
+cpu = CpuProfile()
+
+print(f"{'controller':20s} {'time':>8s} {'energy':>9s} {'tput':>9s} {'power':>8s}")
+print("-" * 60)
+
+rows = []
+for name, build in BASELINE_BUILDERS.items():
+    rows.append(simulate(CHAMELEON, cpu, MIXED,
+                         build(MIXED, CHAMELEON, cpu), total_s=7200))
+for pol in (SLAPolicy.MIN_ENERGY, SLAPolicy.MAX_THROUGHPUT):
+    rows.append(simulate(CHAMELEON, cpu, MIXED,
+                         SLA(policy=pol, max_ch=64), total_s=1800))
+rows.append(simulate(
+    CHAMELEON, cpu, MIXED,
+    SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
+        target_tput_mbps=CHAMELEON.bandwidth_mbps * 0.4, max_ch=64),
+    total_s=2400))
+
+for r in rows:
+    print(f"{r.name:20s} {r.time_s:7.1f}s {r.energy_j:8.0f}J "
+          f"{r.avg_tput_gbps:7.2f}Gb {r.avg_power_w:7.1f}W")
+
+me = next(r for r in rows if r.name == "ME")
+imin = next(r for r in rows if r.name == "ismail-min-energy")
+eemt = next(r for r in rows if r.name == "EEMT")
+imax = next(r for r in rows if r.name == "ismail-max-tput")
+print()
+print(f"ME   energy vs ismail-min-energy : {100 * (1 - me.energy_j / imin.energy_j):+.0f}%")
+print(f"EEMT throughput vs ismail-max    : {100 * (eemt.avg_tput_gbps / imax.avg_tput_gbps - 1):+.0f}%")
+print(f"EEMT energy vs ismail-max        : {100 * (1 - eemt.energy_j / imax.energy_j):+.0f}%")

@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution: SLA-driven energy-efficient
+transfer tuning with dynamic CPU frequency & core scaling.
+
+Public API:
+    types         — SLA, profiles, datasets, pytree states
+    heuristics    — Algorithm 1 (initialization) + channel redistribution
+    tuners        — Algorithms 4-6 (ME / EEMT / EETT) + Slow Start (Alg 2)
+    load_control  — Algorithm 3 (threshold frequency/core scaling)
+    energy_model  — RAPL-calibrated host power model
+    network_model — discrete-time WAN channel simulator
+    engine        — scan-based transfer engine (simulate())
+    baselines     — wget/curl, http/2, Alan/Ismail static tuners
+"""
+from . import (baselines, energy_model, engine, fsm, heuristics,  # noqa: F401
+               load_control, network_model, tuners, types)
+from .engine import TransferResult, simulate  # noqa: F401
+from .types import (CHAMELEON, CLOUDLAB, DIDCLAB, LARGE_FILES,  # noqa: F401
+                    MEDIUM_FILES, MIXED, SMALL_FILES, TESTBEDS, CpuProfile,
+                    DatasetSpec, NetworkProfile, SLA, SLAPolicy,
+                    TransferParams, TunerState)

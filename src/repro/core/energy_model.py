@@ -1,0 +1,61 @@
+"""RAPL-calibrated analytic host-CPU power model.
+
+The paper measures energy with Intel RAPL (Haswell/Broadwell) and a Yokogawa
+WT210.  This container exposes neither, so we use the standard validated
+decomposition (David et al. ISLPED'10; Khan et al. TOMPECS'18):
+
+    P = P_pkg_static
+      + cores_awake * P_core_static
+      + cores_awake * k_dyn * f^3 * util_share      (dynamic, DVFS-cubic)
+      + k_mem * throughput                           (DRAM traffic)
+
+``util_share`` is the per-core utilization in [0, 1].  The cubic frequency
+term is what makes the paper's *load control* (Algorithm 3) pay off: running
+more cores at a lower frequency moves the same instructions/second at lower
+power, until static per-core power dominates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import CpuProfile, freq_table
+
+
+def cpu_capacity_mbps(cpu: CpuProfile, cores, freq_ghz, num_ch):
+    """Max transfer throughput (MB/s) the CPU can push at this operating point.
+
+    capacity = cores * f * IPC / cycles_per_byte, with a small per-channel
+    protocol overhead that grows cycles/byte as channels are added.
+    """
+    cpb = cpu.cycles_per_byte + cpu.cycles_per_byte_per_ch * num_ch
+    instr_per_s = cores.astype(jnp.float32) * freq_ghz * 1e9 * cpu.ipc
+    return instr_per_s / (cpb * 1e6)  # MB/s
+
+
+def cpu_load(cpu: CpuProfile, tput_mbps, cores, freq_ghz, num_ch):
+    """Fraction of available CPU consumed by the transfer (Algorithm 3 input)."""
+    cap = cpu_capacity_mbps(cpu, cores, freq_ghz, num_ch)
+    return jnp.clip(tput_mbps / jnp.maximum(cap, 1e-6), 0.0, 1.0)
+
+
+def power_w(cpu: CpuProfile, cores, freq_ghz, util, tput_mbps):
+    """Instantaneous package power draw (W)."""
+    c = cores.astype(jnp.float32)
+    dyn = c * cpu.core_dyn_w_per_ghz3 * freq_ghz**3 * jnp.clip(util, 0.0, 1.0)
+    static = cpu.pkg_static_w + c * cpu.core_static_w
+    mem = cpu.mem_w_per_mbps * tput_mbps
+    return static + dyn + mem
+
+
+def operating_point(cpu: CpuProfile, cores, freq_idx):
+    """(cores, f_GHz) from an integer operating point."""
+    f = freq_table(cpu)[jnp.clip(freq_idx, 0, len(cpu.freq_levels_ghz) - 1)]
+    c = jnp.clip(cores, 1, cpu.num_cores)
+    return c, f
+
+
+def energy_per_mb(cpu: CpuProfile, cores, freq_ghz, tput_mbps, num_ch):
+    """J/MB at steady state — used by napkin-math tests & Alg-1 sanity checks."""
+    util = cpu_load(cpu, tput_mbps, cores, freq_ghz, num_ch)
+    p = power_w(cpu, cores, freq_ghz, util, tput_mbps)
+    return p / jnp.maximum(tput_mbps, 1e-6)

@@ -1,0 +1,38 @@
+"""Finite-state machine shared by the three tuning algorithms (paper Fig. 1).
+
+States:
+    SLOW_START -> INCREASE <-> WARNING -> RECOVERY -> INCREASE
+
+Feedback is a tri-valued signal computed by each tuner from its own metric
+(energy for ME, throughput for EEMT/EETT):
+
+    POSITIVE  — metric improved beyond the β band
+    NEUTRAL   — within the (−α, +β) band
+    NEGATIVE  — degraded beyond the α band
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SLOW_START = 0
+INCREASE = 1
+WARNING = 2
+RECOVERY = 3
+
+POSITIVE = 1
+NEUTRAL = 0
+NEGATIVE = -1
+
+
+def feedback_from_ratio(value, reference, alpha, beta):
+    """Tri-valued feedback for a *higher-is-better* metric (throughput)."""
+    pos = value > (1.0 + beta) * reference
+    neg = value < (1.0 - alpha) * reference
+    return jnp.where(pos, POSITIVE, jnp.where(neg, NEGATIVE, NEUTRAL))
+
+
+def feedback_from_cost(value, reference, alpha, beta):
+    """Tri-valued feedback for a *lower-is-better* metric (energy)."""
+    pos = value < (1.0 - alpha) * reference
+    neg = value > (1.0 + beta) * reference
+    return jnp.where(pos, POSITIVE, jnp.where(neg, NEGATIVE, NEUTRAL))

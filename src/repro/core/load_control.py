@@ -1,0 +1,44 @@
+"""Algorithm 3 — threshold-based dynamic frequency and core scaling.
+
+    if cpuLoad > maxLoad:        # system saturating
+        first add cores, then raise frequency
+    elif cpuLoad < minLoad:      # system over-provisioned
+        first lower frequency, then park cores
+
+Escalation order matters: at equal IPS, (more cores, lower f) beats
+(fewer cores, higher f) on energy because dynamic power is cubic in f but
+only linear in core count (see energy_model).  The paper encodes exactly
+this order.  Pure function, jit-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import CpuProfile, SLA
+
+
+def load_control(cpu: CpuProfile, sla: SLA, cpu_load, cores, freq_idx):
+    """One Algorithm-3 tick. Returns (cores', freq_idx')."""
+    max_f = len(cpu.freq_levels_ghz) - 1
+
+    hot = cpu_load > sla.max_load
+    cold = cpu_load < sla.min_load
+
+    can_add_core = cores < cpu.num_cores
+    can_raise_f = freq_idx < max_f
+    can_lower_f = freq_idx > 0
+    can_drop_core = cores > 1
+
+    # hot path: cores first, then frequency (lines 2-7)
+    cores_hot = jnp.where(can_add_core, cores + 1, cores)
+    freq_hot = jnp.where(can_add_core, freq_idx,
+                         jnp.where(can_raise_f, freq_idx + 1, freq_idx))
+
+    # cold path: frequency first, then cores (lines 8-13)
+    freq_cold = jnp.where(can_lower_f, freq_idx - 1, freq_idx)
+    cores_cold = jnp.where(can_lower_f, cores,
+                           jnp.where(can_drop_core, cores - 1, cores))
+
+    new_cores = jnp.where(hot, cores_hot, jnp.where(cold, cores_cold, cores))
+    new_freq = jnp.where(hot, freq_hot, jnp.where(cold, freq_cold, freq_idx))
+    return new_cores.astype(jnp.int32), new_freq.astype(jnp.int32)

@@ -1,0 +1,2 @@
+from .pipeline import (MemmapSource, SyntheticSource, TunedFetcher,  # noqa: F401
+                       batches)

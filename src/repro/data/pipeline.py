@@ -1,0 +1,194 @@
+"""Input pipeline whose shard-fetch stage is governed by the paper's tuners.
+
+This is the *real* (non-simulated) integration of the paper: the fetch stage
+has a worker pool ("channels"), and every ``timeout_s`` the same ME / EEMT /
+EETT controller that drives the simulator observes measured bytes/sec and
+actuates (a) the worker count and (b) the host operating point of the energy
+model (on real hosts the actuation hook would write
+/sys/devices/system/cpu/.../cpufreq and core online flags; here it updates
+the accounted operating point — the controller logic is identical).
+
+Sources:
+  * SyntheticSource — deterministic rng token shards (tests, examples)
+  * MemmapSource    — .npy token files on disk
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_model, tuners
+from repro.core.types import CpuProfile, NetworkProfile, SLA
+
+
+class SyntheticSource:
+    """Infinite deterministic token shards.
+
+    ``dist='zipf'`` (default) draws Zipf-distributed tokens so a model has
+    unigram structure to learn (uniform tokens have loss floor ln(V));
+    ``dist='uniform'`` keeps the old behaviour.
+    """
+
+    def __init__(self, vocab_size: int, shard_tokens: int = 65536,
+                 seed: int = 0, dist: str = "zipf"):
+        self.vocab = vocab_size
+        self.shard_tokens = shard_tokens
+        self.seed = seed
+        self.dist = dist
+
+    def read_shard(self, idx: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + idx)
+        if self.dist == "uniform":
+            return rng.integers(0, self.vocab, self.shard_tokens,
+                                dtype=np.int32)
+        z = rng.zipf(1.3, self.shard_tokens).astype(np.int64) - 1
+        return (z % self.vocab).astype(np.int32)
+
+
+class MemmapSource:
+    """Token shards stored as .npy files."""
+
+    def __init__(self, paths):
+        self.paths = list(paths)
+
+    def read_shard(self, idx: int) -> np.ndarray:
+        return np.load(self.paths[idx % len(self.paths)], mmap_mode="r")[:]
+
+
+@dataclasses.dataclass
+class FetchStats:
+    bytes_fetched: float = 0.0
+    t_start: float = 0.0
+    workers: int = 2
+    cores: int = 1
+    freq_idx: int = 0
+    energy_j: float = 0.0
+
+
+class TunedFetcher:
+    """Shard prefetcher with an SLA-tuned worker pool.
+
+    The controller state machine is *exactly* repro.core.tuners; only the
+    Measurement source differs (wall-clock byte counters instead of the
+    simulator).
+    """
+
+    def __init__(self, source, sla: SLA, cpu: Optional[CpuProfile] = None,
+                 profile: Optional[NetworkProfile] = None,
+                 max_workers: int = 16, depth: int = 8):
+        self.source = source
+        self.sla = sla
+        self.cpu = cpu or CpuProfile()
+        self.profile = profile or NetworkProfile()
+        self.max_workers = max_workers
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._idx = 0
+        self._idx_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._workers: list = []
+        self._stats = FetchStats(t_start=time.monotonic())
+        self._ts = tuners.init_tuner_state(2.0, 1, 0)
+        self._threads_target = 2
+
+    # -- worker pool ---------------------------------------------------
+    def _worker(self, wid: int):
+        while not self._stop.is_set():
+            if wid >= self._threads_target:
+                time.sleep(0.02)          # parked "channel"
+                continue
+            with self._idx_lock:
+                idx = self._idx
+                self._idx += 1
+            shard = self.source.read_shard(idx)
+            self._stats.bytes_fetched += shard.nbytes
+            try:
+                self.q.put((idx, shard), timeout=1.0)
+            except queue.Full:
+                with self._idx_lock:
+                    self._idx = min(self._idx, idx)  # retry later
+
+    def start(self):
+        for wid in range(self.max_workers):
+            t = threading.Thread(target=self._worker, args=(wid,), daemon=True)
+            t.start()
+            self._workers.append(t)
+        self._ctl = threading.Thread(target=self._control_loop, daemon=True)
+        self._ctl.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+
+    # -- the paper's controller, on real measurements ------------------
+    def _control_loop(self):
+        last_bytes = 0.0
+        while not self._stop.is_set():
+            time.sleep(self.sla.timeout_s)
+            now_bytes = self._stats.bytes_fetched
+            mb = (now_bytes - last_bytes) / 1e6
+            last_bytes = now_bytes
+            tput = mb / self.sla.timeout_s
+
+            cores, f = energy_model.operating_point(
+                self.cpu, jnp.asarray(self._stats.cores),
+                jnp.asarray(self._stats.freq_idx))
+            util = float(energy_model.cpu_load(
+                self.cpu, jnp.asarray(tput), cores, f,
+                jnp.asarray(float(self._threads_target))))
+            pw = float(energy_model.power_w(self.cpu, cores, f,
+                                            jnp.asarray(util), jnp.asarray(tput)))
+            self._stats.energy_j += pw * self.sla.timeout_s
+
+            meas = tuners.Measurement(
+                avg_tput=jnp.asarray(tput, jnp.float32),
+                energy_j=jnp.asarray(pw * self.sla.timeout_s, jnp.float32),
+                avg_power=jnp.asarray(pw, jnp.float32),
+                remaining_mb=jnp.asarray(1e6, jnp.float32),  # streaming: "inf"
+                cpu_load=jnp.asarray(util, jnp.float32),
+                interval_s=jnp.asarray(self.sla.timeout_s, jnp.float32),
+            )
+            self._ts = tuners.update(self._ts, meas, self.profile, self.cpu,
+                                     self.sla, scaling=True)
+            self._threads_target = int(np.clip(
+                round(float(self._ts.num_ch)), 1, self.max_workers))
+            self._stats.workers = self._threads_target
+            self._stats.cores = int(self._ts.cores)
+            self._stats.freq_idx = int(self._ts.freq_idx)
+
+    @property
+    def stats(self) -> FetchStats:
+        return self._stats
+
+    def shards(self) -> Iterator[np.ndarray]:
+        while not self._stop.is_set():
+            idx, shard = self.q.get()
+            yield shard
+
+
+def batches(source, batch: int, seq: int, sla: Optional[SLA] = None,
+            tuned: bool = True, vocab: int = 32000) -> Iterator[dict]:
+    """Yield train batches {tokens, labels} of [B, T] int32.
+
+    With ``tuned=True`` the shard fetch runs through TunedFetcher.
+    """
+    need = batch * (seq + 1)
+    buf = np.zeros((0,), np.int32)
+    if tuned:
+        fetcher = TunedFetcher(source, sla or SLA()).start()
+        it = fetcher.shards()
+    else:
+        import itertools
+        it = (source.read_shard(i) for i in itertools.count())
+    for shard in it:
+        buf = np.concatenate([buf, np.asarray(shard, np.int32)])
+        while buf.size >= need:
+            chunk, buf = buf[:need], buf[need:]
+            arr = chunk.reshape(batch, seq + 1)
+            yield {"tokens": jnp.asarray(arr[:, :-1]),
+                   "labels": jnp.asarray(arr[:, 1:])}

@@ -1,0 +1,1 @@
+from . import collectives, sharding  # noqa: F401

@@ -1,0 +1,64 @@
+"""Collective helpers: the paper's channelization + energy-aware knobs
+applied to on-pod communication (beyond-paper contribution, §Perf).
+
+* ``chunked_psum`` — split a gradient all-reduce into N channel chunks so the
+  runtime can overlap chunk i's communication with chunk i+1's reduction
+  (the collective analogue of the paper's TCP channel concurrency).
+* ``compress_int8`` / ``decompress_int8`` — per-tensor symmetric int8
+  quantization for gradient compression with error feedback, cutting
+  collective bytes ~2x vs bf16 (4x vs fp32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_psum(x, axis_name, num_chunks: int = 4):
+    """All-reduce ``x`` over ``axis_name`` in ``num_chunks`` sequential chunks.
+
+    Inside shard_map.  For arrays whose leading dim is not divisible, falls
+    back to a single psum.
+    """
+    n = x.shape[0] if x.ndim else 0
+    if x.ndim == 0 or n % num_chunks or num_chunks <= 1:
+        return lax.psum(x, axis_name)
+    parts = jnp.split(x, num_chunks, axis=0)
+    return jnp.concatenate([lax.psum(p, axis_name) for p in parts], axis=0)
+
+
+def compress_int8(g):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_grad_tree(grads, errors=None):
+    """Quantize every gradient leaf with error feedback.
+
+    Returns (quantized_tree, scales_tree, new_errors_tree).  The caller
+    all-reduces the int8 tree (4x fewer bytes than fp32), dequantizes, and
+    carries ``new_errors`` into the next step.
+    """
+    if errors is None:
+        errors = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress_int8(gf)
+        deq = decompress_int8(q, s)
+        return q, s, gf - deq
+
+    out = jax.tree.map(one, grads, errors)
+    is_t = lambda x: isinstance(x, tuple)
+    qs = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+    ss = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    es = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+    return qs, ss, es

@@ -1,0 +1,153 @@
+"""Partition rules: map every parameter path to a PartitionSpec.
+
+Mesh axes:
+    single pod:  (data=16, model=16)
+    multi-pod:   (pod=2, data=16, model=16)  — batch shards over (pod, data),
+                 gradients all-reduce across pods on the same spec.
+
+Tensor-parallel scheme (megatron-style):
+    embed   [V, D]          -> (model, None)    vocab-sharded; logits RS/AG
+    wq/wk/wv [D, H*hd]      -> (None, model)    head-sharded (column)
+    wo      [H*hd, D]       -> (model, None)    row
+    mlp wg/wu [D, F]        -> (None, model)    column
+    mlp wd  [F, D]          -> (model, None)    row
+    MoE experts [E, D, F]   -> (model, None, None)  expert-parallel
+    rwkv time-mix projs     -> column/row like attention
+    rglru wx/wy|wo          -> column/row; gate block-diagonals replicated
+    1-D params (norms, mus) -> replicated
+
+Stacked-layer params carry a leading L axis -> prepend None.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on '/'-joined path, spec WITHOUT the stacked-layer axis)
+_RULES = (
+    (r"embed$",                      P("model", None)),
+    (r"head$",                       P(None, "model")),
+    (r"(attn|self_attn|cross_attn)/w[qkv]$", P(None, "model")),
+    (r"(attn|self_attn|cross_attn)/wo$",     P("model", None)),
+    (r"(attn|self_attn|cross_attn)/b[qkv]$", P("model")),
+    # moe experts: expert-parallel over the model axis
+    (r"moe/w[gu]$",                  P("model", None, None)),
+    (r"moe/wd$",                     P("model", None, None)),
+    (r"moe/router$",                 P(None, None)),
+    (r"moe/shared/w[gu]$",           P(None, "model")),
+    (r"moe/shared/wd$",              P("model", None)),
+    # dense mlp
+    (r"mlp/w[gu]$",                  P(None, "model")),
+    (r"mlp/wd$",                     P("model", None)),
+    (r"mlp/b[ud]$",                  P(None)),
+    # rwkv time-mix / channel-mix
+    (r"tm/w[rkvg]$",                 P(None, "model")),
+    (r"tm/wo$",                      P("model", None)),
+    (r"tm/(mix_A|mix_B|w_A|w_B|mu|w0|u|gn_scale)$", None),  # small, replicated
+    (r"cm/w[k]$",                    P(None, "model")),
+    (r"cm/wv$",                      P("model", None)),
+    (r"cm/wr$",                      P(None, "model")),
+    (r"cm/(mu_k|mu_r)$",             None),
+    # rglru recurrent blocks
+    (r"rec/w[xy]$",                  P(None, "model")),
+    (r"rec/wo$",                     P("model", None)),
+    (r"rec/conv_[wb]$",              None),
+    (r"rec/(gate_a|gate_x)/[wb]$",   None),
+    (r"rec/lam$",                    None),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, ndim: int, stacked: bool,
+             shape=None, model_divisor: int = 16) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            if spec is None:
+                return P()
+            want = len(spec) + (1 if stacked else 0)
+            if ndim == want and stacked:
+                spec = P(None, *spec)
+            elif ndim != len(spec):
+                # dimensionality mismatch (e.g. layer-stacked bias): replicate
+                return P()
+            if shape is not None:
+                # drop 'model' from dims the axis size does not divide
+                # (e.g. whisper's vocab 51865) instead of forcing GSPMD
+                # padding.
+                fixed = tuple(
+                    None if (ax == "model" and dim % model_divisor != 0)
+                    else ax
+                    for ax, dim in zip(tuple(spec), shape))
+                spec = P(*fixed)
+            return spec
+    return P()   # default: replicated (norms, scalars)
+
+
+def param_specs(params, *, stacked_blocks_key: str = "blocks",
+                model_divisor: int = 16):
+    """PartitionSpec pytree matching ``params``; layer-stacked subtrees
+    (under ``blocks``) get a leading None axis."""
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith(stacked_blocks_key + "/") or \
+            ("/" + stacked_blocks_key + "/") in ps
+        return spec_for(ps, leaf.ndim, stacked, shape=leaf.shape,
+                        model_divisor=model_divisor)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def data_axes(mesh: Mesh):
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None)
+
+
+def shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree, opt_state):
+    """AdamW mu/nu shard exactly like their parameters."""
+    from repro.optim import OptState
+    return OptState(mu=param_spec_tree, nu=param_spec_tree,
+                    count=P())
+
+
+def zero_specs(pspecs, params_shapes, mesh: Mesh):
+    """ZeRO-style widening: additionally shard the first replicated,
+    divisible dim of every param over the 'data' axis.  Used for the fp32
+    optimizer moments and the microbatch gradient accumulator — at 30B-MoE
+    scale those dominate per-device memory (measured 19 GB/device without)."""
+    dsz = mesh.shape.get("data", 1)
+    if dsz <= 1:
+        return pspecs
+
+    def widen(spec, leaf):
+        s = list(tuple(spec) + (None,) * (leaf.ndim - len(spec)))
+        for i, (ax, dim) in enumerate(zip(s, leaf.shape)):
+            if ax is None and dim % dsz == 0:
+                s[i] = "data"
+                return P(*s)
+        return P(*s)
+
+    return jax.tree.map(widen, pspecs, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel ships as a triple:
+    <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py    — jit'd wrapper (model layout <-> kernel layout, interpret
+                fallback on CPU)
+    ref.py    — pure-jnp oracle; tests sweep shapes/dtypes with
+                assert_allclose against it
+
+kernels:
+    flash_attention — online-softmax attention; grid (B,H,nQ,nK), K-axis
+                      sequential with (m,l,acc) carried in VMEM scratch;
+                      GQA via index_map (no repeated K/V in HBM); causal +
+                      sliding-window block skipping
+    rwkv6           — WKV recurrence; S [hd,hd] fp32 carried in VMEM across
+                      time chunks (state never round-trips HBM)
+    rglru           — RG-LRU gated linear recurrence, channel-blocked
+"""
+from . import flash_attention, rglru, rwkv6  # noqa: F401

@@ -1,0 +1,79 @@
+"""Public wrapper: model layout [B,T,H,hd] <-> kernel layout [B,H,T,hd].
+
+On CPU (tests, this container) the kernel runs with interpret=True; on TPU
+it lowers to Mosaic.  ``use_kernel=False`` falls back to the oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention_bhtd
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret=None):
+    """q [B,Tq,H,hd], k/v [B,Tk,Hkv,hd] -> [B,Tq,H,hd].
+
+    Non-causal attention requires Tk % bk == 0 (causal masking is what
+    neutralizes the zero-padded tail of a partial K block)."""
+    if not causal and k.shape[1] % min(bk, k.shape[1]) != 0:
+        raise ValueError(
+            f"non-causal flash attention needs Tk divisible by bk "
+            f"(Tk={k.shape[1]}, bk={bk}); pad K/V or adjust bk")
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhtd(qt, kt, vt, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    o = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------- trainable -----
+
+import functools
+
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_trainable(q, k, v, causal=True, window=0,
+                              interpret=True):
+    """Differentiable flash attention ([B,T,H,hd] layout): forward and
+    backward both run the Pallas kernels (LSE saved between them)."""
+    o, _ = _fa_fwd(q, k, v, causal, window, interpret)
+    return o
+
+
+def _fa_fwd(q, k, v, causal, window, interpret):
+    from .flash_attention import flash_attention_bhtd
+    tr = lambda a: a.transpose(0, 2, 1, 3)
+    o, lse = flash_attention_bhtd(tr(q), tr(k), tr(v), causal=causal,
+                                  window=window, interpret=interpret,
+                                  return_lse=True)
+    return tr(o), (q, k, v, o, lse)   # o saved in kernel layout [B,H,T,hd]
+
+
+def _fa_bwd(causal, window, interpret, res, g):
+    from .flash_attention_bwd import flash_attention_bwd_bhtd
+    q, k, v, o_t, lse = res
+    tr = lambda a: a.transpose(0, 2, 1, 3)
+    dq, dk, dv = flash_attention_bwd_bhtd(
+        tr(q), tr(k), tr(v), o_t, lse, tr(g), causal=causal, window=window,
+        interpret=interpret)
+    return tr(dq), tr(dk), tr(dv)
+
+
+flash_attention_trainable.defvjp(_fa_fwd, _fa_bwd)

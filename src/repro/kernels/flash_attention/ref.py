@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,H,Tq,hd], k/v [B,Hkv,Tk,hd] -> [B,H,Tq,hd] (fp32 math)."""
+    B, H, Tq, hd = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.zeros((Tq, Tk), bool)
+    if causal:
+        mask |= kpos > qpos
+    if window > 0:
+        mask |= kpos <= qpos - window
+    s = jnp.where(mask[None, None], NEG_INF, s)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

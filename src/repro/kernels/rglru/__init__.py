@@ -1,0 +1,1 @@
+from .ops import rglru, rglru_oracle  # noqa: F401

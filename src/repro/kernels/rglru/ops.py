@@ -1,0 +1,16 @@
+"""Wrapper for the RG-LRU Pallas scan."""
+from __future__ import annotations
+
+import jax
+
+from .ref import rglru_ref
+from .rglru import rglru_scan
+
+
+def rglru(a, b, *, bt: int = 256, bc: int = 512, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan(a, b, bt=bt, bc=bc, interpret=interpret)
+
+
+rglru_oracle = rglru_ref

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t via associative_scan (fp32)."""
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the WKV kernel (same math as models.rwkv6.wkv_scan)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u):
+    """r,k,v,w [B,H,T,hd]; u [H,hd] -> y [B,H,T,hd] (fp32 scan)."""
+    B, H, T, hd = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # [B,H,hd]
+        att = jnp.einsum("bhi,bhij->bhj", rt, S)
+        bonus = jnp.einsum("bhi,bhi->bh", rt, uf[None] * kt)
+        y = att + bonus[..., None] * vt
+        S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (rf, kf, vf, wf))
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

@@ -1,0 +1,76 @@
+"""Extract roofline terms from compiled dry-run artifacts.
+
+``cost_analysis()`` provides HLO FLOPs / bytes; collective traffic is parsed
+out of the post-SPMD HLO text: we sum the *result* sizes of every
+all-gather / all-to-all / collective-permute / reduce-scatter and count
+all-reduce twice (ring AR = reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind result bytes of every collective op (whole program, i.e.
+    global across all shards of the SPMD program)."""
+    out = defaultdict(int)
+    counts = defaultdict(int)
+    for m in _LINE_RE.finditer(hlo_text):
+        type_str, kind, _ = m.groups()
+        b = _shape_bytes(type_str)
+        if kind == "all-reduce":
+            b *= 2          # ring AR = RS + AG
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return {"bytes": dict(out), "counts": dict(counts)}
+
+
+# TPU v5e per-chip constants (targets; this container is CPU-only).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (3D-torus links per chip ~ 4)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    """Three per-step roofline times (seconds).  Inputs are PER-DEVICE
+    quantities (cost_analysis of the partitioned executable / collective
+    result bytes of the per-device program)."""
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms

@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+Nothing here allocates device memory: the dry-run lowers/compiles against
+these abstract values only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import data_axes
+from repro.models import build
+from repro.models.common import ModelConfig
+
+VLM_IMG_TOKENS = 1024   # patch-token slots inside the sequence (stub frontend)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_axes(mesh: Mesh, batch: int, dp_only: bool = False):
+    """Largest prefix of the dp axes that divides ``batch``.  With
+    ``dp_only`` the 'model' axis joins the batch axes (pure data
+    parallelism — the right scheme for sub-1B models on a 256-chip pod)."""
+    axes = []
+    n = 1
+    cand = data_axes(mesh) + (("model",) if dp_only else ())
+    for ax in cand:
+        size = mesh.shape[ax]
+        if batch % (n * size) == 0:
+            axes.append(ax)
+            n *= size
+    return tuple(axes) if axes else None
+
+
+def kv_cache_spec(cfg: ModelConfig, mesh: Mesh, batch_axes, stacked: bool):
+    """KV cache [.., B, S, Hkv, hd]: shard heads over 'model' when divisible,
+    else shard the sequence dim (GSPMD inserts gather/reduce)."""
+    msize = mesh.shape["model"]
+    if cfg.num_kv_heads % msize == 0:
+        spec = P(batch_axes, None, "model", None)
+    else:
+        spec = P(batch_axes, "model", None, None)
+    return P(None, *spec) if stacked else spec
+
+
+def _state_specs(cfg: ModelConfig, mesh: Mesh, state, batch: int):
+    """Sharding specs for a decode-state pytree (family-dependent)."""
+    ba = _batch_axes(mesh, batch)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        # stacked dict {k,v,idx}: k/v [L,B,S,Hkv,hd], idx [L]
+        kv = kv_cache_spec(cfg, mesh, ba, stacked=True)
+        return {"k": kv, "v": kv, "idx": P(None)}
+    if cfg.family == "ssm":
+        # (tm_last [L,B,D], S [L,B,H,hd,hd], cm_last [L,B,D])
+        msize = mesh.shape["model"]
+        hspec = "model" if cfg.num_heads % msize == 0 else None
+        return (P(None, ba, "model"),
+                P(None, ba, hspec, None, None),
+                P(None, ba, "model"))
+    if cfg.family == "hybrid":
+        specs = []
+        for st in state:
+            if isinstance(st, dict):          # ring kv cache
+                kv = kv_cache_spec(cfg, mesh, ba, stacked=False)
+                specs.append({"k": kv, "v": kv, "pos": P(ba, None),
+                              "idx": P()})
+            else:                             # (conv_state, h)
+                specs.append((P(ba, None, "model"), P(ba, "model")))
+        return specs
+    if cfg.family == "audio":
+        kv = kv_cache_spec(cfg, mesh, ba, stacked=False)
+        return [{"k": kv, "v": kv, "idx": P()} for _ in state]
+    raise ValueError(cfg.family)
+
+
+def input_specs(cfg, shape_name: str, mesh: Mesh, dp_only: bool = False):
+    """Returns (abstract_inputs: dict, input_shardings: dict, kind).
+
+    ``cfg``: a ModelConfig (possibly a depth-reduced probe variant)."""
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    sh = SHAPES[shape_name]
+    kind, S, B = sh["kind"], sh["seq_len"], sh["global_batch"]
+    ba = _batch_axes(mesh, B, dp_only)
+    tok_spec = P(ba, None)
+    dt = jnp.bfloat16
+
+    def shard(spec):
+        return NamedSharding(mesh, spec)
+
+    if kind == "train":
+        inputs = {"tokens": _sds((B, S), jnp.int32),
+                  "labels": _sds((B, S), jnp.int32)}
+        shards = {"tokens": shard(tok_spec), "labels": shard(tok_spec)}
+        if cfg.family == "audio":
+            inputs["frame_embeds"] = _sds((B, cfg.encoder_positions,
+                                           cfg.d_model), dt)
+            shards["frame_embeds"] = shard(P(ba, None, "model"))
+        if cfg.family == "vlm":
+            inputs["vision_embeds"] = _sds((B, VLM_IMG_TOKENS, cfg.d_model), dt)
+            inputs["mrope_pos"] = _sds((3, B, S), jnp.int32)
+            shards["vision_embeds"] = shard(P(ba, None, "model"))
+            shards["mrope_pos"] = shard(P(None, ba, None))
+        return inputs, shards, kind
+
+    if kind == "prefill":
+        inputs = {"tokens": _sds((B, S), jnp.int32)}
+        shards = {"tokens": shard(tok_spec)}
+        if cfg.family == "audio":
+            inputs["frame_embeds"] = _sds((B, cfg.encoder_positions,
+                                           cfg.d_model), dt)
+            shards["frame_embeds"] = shard(P(ba, None, "model"))
+        if cfg.family == "vlm":
+            inputs["vision_embeds"] = _sds((B, VLM_IMG_TOKENS, cfg.d_model), dt)
+            inputs["mrope_pos"] = _sds((3, B, S), jnp.int32)
+            shards["vision_embeds"] = shard(P(ba, None, "model"))
+            shards["mrope_pos"] = shard(P(None, ba, None))
+        return inputs, shards, kind
+
+    # decode: one new token against a length-S state
+    bundle = build(cfg)
+    state = jax.eval_shape(lambda: bundle.init_decode_state(B, S))
+    state_specs = _state_specs(cfg, mesh, state, B)
+    inputs = {"tokens": _sds((B, 1), jnp.int32),
+              "positions": _sds((B, 1), jnp.int32),
+              "state": state}
+    shards = {"tokens": shard(tok_spec),
+              "positions": shard(tok_spec),
+              "state": jax.tree.map(lambda s: shard(s), state_specs,
+                                    is_leaf=lambda x: isinstance(x, P))}
+    if cfg.family == "audio":
+        F = cfg.encoder_positions
+        inputs["enc_out"] = _sds((B, F, cfg.d_model), dt)
+        shards["enc_out"] = shard(P(ba, None, "model"))
+    if cfg.family == "vlm":
+        inputs["mrope_pos"] = _sds((3, B, 1), jnp.int32)
+        shards["mrope_pos"] = shard(P(None, ba, None))
+    return inputs, shards, kind

@@ -1,0 +1,65 @@
+"""Model zoo: one functional bundle per architecture family.
+
+``build(cfg)`` dispatches on ``cfg.family``:
+    dense | moe | vlm  -> lm.py        (decoder-only transformer)
+    ssm                -> rwkv6.py     (Finch, attention-free)
+    hybrid             -> rglru.py     (recurrentgemma: RG-LRU + local attn)
+    audio              -> whisper.py   (encoder-decoder)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from . import lm, rglru, rwkv6, whisper  # noqa: F401
+from .common import ModelConfig, MoEConfig  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    """Uniform interface over heterogeneous families."""
+
+    cfg: ModelConfig
+    init_params: Callable[[Any], Any]
+    forward: Callable[..., Any]               # (params, tokens, **kw) -> (logits, state, aux)
+    init_decode_state: Callable[..., Any]     # (batch, max_len) -> state
+    state_kwarg: str                          # name of the decode-state kwarg
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg=cfg,
+            init_params=lambda rng: lm.init_params(cfg, rng),
+            forward=lambda params, tokens, **kw: lm.forward(cfg, params, tokens, **kw),
+            init_decode_state=lambda b, m, dtype=jnp.bfloat16: lm.init_caches(cfg, b, m, dtype),
+            state_kwarg="caches",
+        )
+    if fam == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init_params=lambda rng: rwkv6.init_params(cfg, rng),
+            forward=lambda params, tokens, **kw: rwkv6.forward(cfg, params, tokens, **kw),
+            init_decode_state=lambda b, m, dtype=jnp.bfloat16: rwkv6.init_states(cfg, b, dtype),
+            state_kwarg="states",
+        )
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init_params=lambda rng: rglru.init_params(cfg, rng),
+            forward=lambda params, tokens, **kw: rglru.forward(cfg, params, tokens, **kw),
+            init_decode_state=lambda b, m, dtype=jnp.bfloat16: rglru.init_states(cfg, b, m, dtype),
+            state_kwarg="states",
+        )
+    if fam == "audio":
+        return ModelBundle(
+            cfg=cfg,
+            init_params=lambda rng: whisper.init_params(cfg, rng),
+            forward=lambda params, tokens, **kw: whisper.forward(cfg, params, tokens, **kw),
+            init_decode_state=lambda b, m, dtype=jnp.bfloat16: whisper.init_caches(cfg, b, m, dtype),
+            state_kwarg="caches",
+        )
+    raise ValueError(f"unknown family {fam!r}")

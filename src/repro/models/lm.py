@@ -1,0 +1,145 @@
+"""Decoder-only LM covering the dense / MoE / VLM assigned architectures.
+
+One parameter layout + forward for: qwen2-0.5b, qwen3-0.6b, olmo-1b, yi-9b,
+moonshot-v1-16b-a3b, qwen3-moe-30b-a3b, qwen2-vl-2b (text backbone with
+M-RoPE; patch embeddings arrive pre-computed through ``vision_embeds``).
+
+Layers are stacked with ``jax.vmap`` at init and iterated with
+``jax.lax.scan`` at apply time, so compile time is depth-independent —
+essential for the 40-cell multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .common import ModelConfig
+
+
+def init_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(cfg, k2)
+    else:
+        p["mlp"] = L.init_mlp(cfg, k2)
+    return p
+
+
+def block_fwd(cfg: ModelConfig, p, x, positions, cache, mrope_pos,
+              moe_impl: str):
+    if cfg.seq_parallel and cache is None:
+        x = L.residual_shard(x)
+    h, new_cache = L.attention(
+        cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x), positions,
+        causal=True, window=cfg.sliding_window, cache=cache,
+        mrope_pos=mrope_pos)
+    x = x + h
+    hn = L.apply_norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        if moe_impl == "a2a":
+            from repro.distributed.moe_a2a import moe_a2a
+            h, aux = moe_a2a(cfg, p["moe"], hn)
+        else:
+            fn = L.moe_gmm if moe_impl == "gmm" else L.moe_dense
+            h, aux = fn(cfg, p["moe"], hn)
+    else:
+        h, aux = L.mlp(cfg, p["mlp"], hn), jnp.zeros((), jnp.float32)
+    return x + h, new_cache, aux
+
+
+def init_params(cfg: ModelConfig, rng):
+    ke, kb, kh, kf = jax.random.split(rng, 4)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    emb = (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(cfg, k))(block_keys)
+    params = {"embed": emb, "blocks": blocks,
+              "final_norm": L.init_norm(cfg, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) * 0.02
+        ).astype(dt)
+    return params
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None, caches=None,
+            vision_embeds=None, mrope_pos=None, moe_impl: str = "gmm",
+            logits_slice: Optional[int] = None):
+    """Run the LM.
+
+    tokens        [B, T] int32
+    positions     [B, T] (defaults to arange; decode passes cache offsets)
+    caches        stacked layer KV caches (decode) or None
+    vision_embeds [B, Tv, D] pre-computed patch embeddings (VLM stub):
+                  replaces the embedding of the first Tv token slots.
+    Returns (logits [B, T, V], new_caches, aux_loss).
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    if vision_embeds is not None:
+        Tv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, Tv:]], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    block = functools.partial(block_fwd, cfg, moe_impl=moe_impl)
+    if cfg.remat and caches is None:  # remat only pays off under grad
+        block = jax.checkpoint(block, policy=L.remat_policy(cfg))
+
+    if cfg.unroll_layers:
+        take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+        auxs = []
+        ncs = []
+        for i in range(cfg.num_layers):
+            c = take(caches, i) if caches is not None else None
+            x, c2, aux = block(take(params["blocks"], i), x, positions, c,
+                               mrope_pos)
+            auxs.append(aux)
+            if caches is not None:
+                ncs.append(c2)
+        auxs = jnp.stack(auxs)
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+                      if caches is not None else None)
+    elif caches is None:
+        def body(x, bp):
+            x, _, aux = block(bp, x, positions, None, mrope_pos)
+            return x, aux
+        x, auxs = lax.scan(body, x, params["blocks"])
+        new_caches = None
+    else:
+        def body(x, bp_cache):
+            bp, c = bp_cache
+            x, c2, aux = block(bp, x, positions, c, mrope_pos)
+            return x, (c2, aux)
+        x, (new_caches, auxs) = lax.scan(body, x, (params["blocks"], caches))
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["head"]
+    if caches is None:
+        logits = L.logits_shard(logits)
+    return logits, new_caches, jnp.sum(auxs)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, per_row: bool = False):
+    """Stacked [L, ...] KV caches for decode.  ``per_row``: continuous-
+    batching caches where each batch slot writes at its own position."""
+    one = L.init_cache(cfg, batch, max_len, dtype, per_row=per_row)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy()
+        if a.ndim else jnp.zeros((cfg.num_layers,), a.dtype), one)

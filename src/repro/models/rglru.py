@@ -1,0 +1,197 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427) — RG-LRU + local attention.
+
+Block pattern (1 attention : 2 recurrent): layer i is a local-MQA block when
+``i % 3 == 2``, else a recurrent block:
+
+    recurrent block:  x -> Wx -> causal depthwise conv1d(w=4) -> RG-LRU ┐
+                      x -> Wy -> GeLU ──────────────────────────────────┤⊙ -> Wo
+    RG-LRU:  r_t = σ(BD_a x_t);  i_t = σ(BD_x x_t)
+             a_t = exp(c · r_t · log σ(Λ))           (c = 8)
+             h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Gates use block-diagonal linear maps (8 blocks), as in the official impl.
+The sequence-parallel path uses ``lax.associative_scan`` (O(log T) depth);
+decode keeps O(1) state.  The Pallas kernel (repro/kernels/rglru) implements
+the fused time-chunked version of the same recurrence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .common import ModelConfig
+
+GATE_BLOCKS = 8
+LRU_C = 8.0
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def is_attn_layer(cfg: ModelConfig, i: int) -> bool:
+    return cfg.block_pattern[i % len(cfg.block_pattern)] == "local"
+
+
+def init_block_diag(key, d, blocks, dt):
+    bd = d // blocks
+    w = jax.random.normal(key, (blocks, bd, bd)) / math.sqrt(bd)
+    return {"w": w.astype(dt), "b": jnp.zeros((d,), dt)}
+
+
+def block_diag_apply(p, x):
+    """x [..., D] with D = blocks * bd."""
+    blocks, bd, _ = p["w"].shape
+    xs = x.reshape(x.shape[:-1] + (blocks, bd))
+    y = jnp.einsum("...gi,gij->...gj", xs, p["w"])
+    return y.reshape(x.shape) + p["b"]
+
+
+def init_recurrent_block(cfg: ModelConfig, key):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": (jax.random.normal(ks[0], (d, lru)) / math.sqrt(d)).astype(dt),
+        "wy": (jax.random.normal(ks[1], (d, lru)) / math.sqrt(d)).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, lru)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((lru,), dt),
+        "gate_a": init_block_diag(ks[3], lru, GATE_BLOCKS, dt),
+        "gate_x": init_block_diag(ks[4], lru, GATE_BLOCKS, dt),
+        # Λ init so that a = σ(Λ) ∈ (0.9, 0.999) — long memory at init
+        "lam": jnp.linspace(2.2, 6.9, lru).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[5], (lru, d)) / math.sqrt(lru)).astype(dt),
+    }
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x [B,T,C], w [W,C]. state [B,W-1,C] or None.
+
+    Returns (y [B,T,C], new_state [B,W-1,C])."""
+    W = w.shape[0]
+    pad = jnp.zeros_like(x[:, : W - 1]) if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # [B, T+W-1, C]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W)) + b
+    return y, xp[:, -(W - 1):]
+
+
+def rg_lru(p, x, h0=None):
+    """x [B,T,C] -> (y [B,T,C], h_last [B,C]).  associative_scan over T."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(block_diag_apply(p["gate_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(block_diag_apply(p["gate_x"], x).astype(jnp.float32))
+    log_a1 = -jax.nn.softplus(-p["lam"])                      # log σ(Λ) < 0
+    log_at = LRU_C * r * log_a1                               # [B,T,C]
+    a = jnp.exp(log_at)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12)) * (i * xf)
+
+    if h0 is not None:
+        # fold the carried state into the first step: b_0 += a_0 * h0
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def recurrent_block(cfg: ModelConfig, p, x, state=None):
+    """state = (conv_state [B,W-1,C], h [B,C]) or None."""
+    conv_st = h0 = None
+    if state is not None:
+        conv_st, h0 = state
+    u = x @ p["wx"]
+    u, conv_st2 = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_st)
+    u, h_last = rg_lru(p, u, h0)
+    gate = jax.nn.gelu(x @ p["wy"])
+    return (u * gate) @ p["wo"], (conv_st2, h_last)
+
+
+def init_layer(cfg: ModelConfig, key, i: int):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_norm(cfg, cfg.d_model),
+         "ln2": L.init_norm(cfg, cfg.d_model),
+         "mlp": L.init_mlp(cfg, k2)}
+    if is_attn_layer(cfg, i):
+        p["attn"] = L.init_attention(cfg, k1)
+    else:
+        p["rec"] = init_recurrent_block(cfg, k1)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng):
+    ke, kb = jax.random.split(rng)
+    dt = _dt(cfg)
+    keys = jax.random.split(kb, cfg.num_layers)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "layers": [init_layer(cfg, keys[i], i) for i in range(cfg.num_layers)],
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None, states=None,
+            logits_slice=None, **_):
+    """states: list of per-layer state (attn: kv-cache dict; rec: tuple).
+
+    RecurrentGemma scales embeddings by sqrt(d_model)."""
+    B, T = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def layer_fwd(i, p, x, state):
+        if cfg.seq_parallel and state is None:
+            x = L.residual_shard(x)
+        hn = L.apply_norm(cfg, p["ln1"], x)
+        if is_attn_layer(cfg, i):
+            h, st2 = L.attention(cfg, p["attn"], hn, positions, causal=True,
+                                 window=cfg.sliding_window, cache=state)
+        else:
+            h, st2 = recurrent_block(cfg, p["rec"], hn, state)
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+        return x, st2
+
+    new_states = [] if states is not None else None
+    for i, p in enumerate(params["layers"]):
+        st = states[i] if states is not None else None
+        fn = layer_fwd
+        if cfg.remat and states is None:
+            fn = jax.checkpoint(layer_fwd, policy=L.remat_policy(cfg),
+                                static_argnums=(0,))
+        x, st2 = fn(i, p, x, st)
+        if states is not None:
+            new_states.append(st2)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = x @ params["embed"].T.astype(x.dtype)
+    if states is None:
+        logits = L.logits_shard(logits)
+    return logits, new_states, jnp.zeros((), jnp.float32)
+
+
+def init_states(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Decode state. Local-attn layers get a window-sized KV cache."""
+    lru = cfg.lru_width or cfg.d_model
+    states = []
+    cache_len = min(max_len, cfg.sliding_window or max_len)
+    for i in range(cfg.num_layers):
+        if is_attn_layer(cfg, i):
+            states.append(L.init_cache(cfg, batch, cache_len, dtype, ring=True))
+        else:
+            states.append((jnp.zeros((batch, cfg.conv_width - 1, lru), dtype),
+                           jnp.zeros((batch, lru), jnp.float32)))
+    return states

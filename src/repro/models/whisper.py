@@ -1,0 +1,157 @@
+"""Whisper-small backbone (arXiv:2212.04356) — encoder-decoder transformer.
+
+The conv1d audio frontend is a STUB per the assignment: ``input_specs()``
+supplies pre-computed frame embeddings [B, frames, d_model] (what the two
+conv layers + GELU would produce from the log-mel spectrogram).
+
+Positions are sinusoidal for both stacks.  (Upstream whisper uses a *learned*
+decoder positional table capped at 448; the assignment's mechanical 32k
+decode shapes require unbounded positions, so we use the sinusoidal form —
+noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .common import ModelConfig
+
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 16) -> int:
+    """Round the vocab up so the embedding/logits shard over 'model'
+    (whisper's 51865 is not divisible by 16; unsharded fp32 dlogits cost
+    ~14 GB/device on the train cell).  Pad logits are masked to -inf."""
+    return ((cfg.vocab_size + multiple - 1) // multiple) * multiple
+
+
+def sinusoidal(positions, d_model: int):
+    """positions [B,T] -> [B,T,D] fp32 sinusoidal embeddings."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_enc_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(cfg, k1),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, k2)}
+
+
+def init_dec_layer(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_norm(cfg, cfg.d_model),
+            "self_attn": L.init_attention(cfg, k1),
+            "ln_x": L.init_norm(cfg, cfg.d_model),
+            "cross_attn": L.init_attention(cfg, k2, cross=True),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, k3)}
+
+
+def init_params(cfg: ModelConfig, rng):
+    ke, kenc, kdec = jax.random.split(rng, 3)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    enc_keys = jax.random.split(kenc, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    return {
+        "embed": (jax.random.normal(ke, (padded_vocab(cfg), cfg.d_model))
+                  * 0.02).astype(dt),
+        "enc_layers": [init_enc_layer(cfg, k) for k in enc_keys],
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+        "dec_layers": [init_dec_layer(cfg, k) for k in dec_keys],
+        "dec_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params, frame_embeds):
+    """frame_embeds [B, F, D] (stub conv frontend output)."""
+    B, F, D = frame_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+    x = frame_embeds + sinusoidal(pos, D).astype(frame_embeds.dtype)
+    zero_pos = jnp.zeros((B, F), jnp.int32)
+    def enc_layer(p, x):
+        # bidirectional self-attention; passing xkv skips rotary embedding
+        # (whisper uses absolute sinusoidal positions only)
+        if cfg.seq_parallel:
+            x = L.residual_shard(x)
+        hn = L.apply_norm(cfg, p["ln1"], x)
+        h, _ = L.attention(cfg, p["attn"], hn, zero_pos, causal=False, xkv=hn)
+        x = x + h
+        return x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+
+    if cfg.remat:
+        enc_layer = jax.checkpoint(enc_layer, policy=L.remat_policy(cfg))
+    for p in params["enc_layers"]:
+        x = enc_layer(p, x)
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode(cfg: ModelConfig, params, tokens, enc_out, *, positions=None,
+           caches=None, logits_slice=None):
+    """Decoder stack. caches: list of per-layer self-attn KV caches or None."""
+    B, T = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = params["embed"][tokens] + sinusoidal(positions, cfg.d_model).astype(
+        params["embed"].dtype)
+
+    def dec_layer(p, x, cache):
+        if cfg.seq_parallel and cache is None:
+            x = L.residual_shard(x)
+        h, c2 = L.attention(cfg, p["self_attn"],
+                            L.apply_norm(cfg, p["ln1"], x), positions,
+                            causal=True, cache=cache)
+        x = x + h
+        h, _ = L.attention(cfg, p["cross_attn"],
+                           L.apply_norm(cfg, p["ln_x"], x), positions,
+                           causal=False, xkv=enc_out)
+        x = x + h
+        return x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x)), c2
+
+    fn = dec_layer
+    if cfg.remat and caches is None:
+        fn = jax.checkpoint(dec_layer, policy=L.remat_policy(cfg))
+
+    new_caches = [] if caches is not None else None
+    for i, p in enumerate(params["dec_layers"]):
+        cache = caches[i] if caches is not None else None
+        x, c2 = fn(p, x, cache)
+        if caches is not None:
+            new_caches.append(c2)
+
+    x = L.apply_norm(cfg, params["dec_norm"], x)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = x @ params["embed"].T.astype(x.dtype)
+    pv = params["embed"].shape[0]
+    if pv != cfg.vocab_size:   # mask the vocab-padding slots
+        vocab_iota = jnp.arange(pv)
+        logits = jnp.where(vocab_iota[None, None, :] < cfg.vocab_size,
+                           logits, jnp.asarray(-1e30, logits.dtype))
+    if caches is None:
+        logits = L.logits_shard(logits)
+    return logits, new_caches
+
+
+def forward(cfg: ModelConfig, params, tokens, *, frame_embeds=None,
+            positions=None, caches=None, enc_out=None, logits_slice=None,
+            **_):
+    """Teacher-forced enc-dec forward.  For decode steps pass ``enc_out``
+    (pre-computed) + ``caches``. Returns (logits, new_caches, aux)."""
+    if enc_out is None:
+        assert frame_embeds is not None, "whisper needs frame_embeds"
+        enc_out = encode(cfg, params, frame_embeds)
+    logits, new_caches = decode(cfg, params, tokens, enc_out,
+                                positions=positions, caches=caches,
+                                logits_slice=logits_slice)
+    return logits, new_caches, jnp.zeros((), jnp.float32)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return [L.init_cache(cfg, batch, max_len, dtype)
+            for _ in range(cfg.num_layers)]

@@ -1,0 +1,2 @@
+from .step import generate, make_decode_step, make_prefill  # noqa: F401
+from .scheduler import ContinuousBatcher, Request  # noqa: F401

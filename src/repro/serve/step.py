@@ -1,0 +1,56 @@
+"""Serving: prefill + single-token decode steps for every family.
+
+``serve_step`` is what the decode_32k / long_500k dry-run cells lower:
+one new token against a populated KV cache / recurrent state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelBundle
+
+
+def make_decode_step(bundle: ModelBundle, *, sample: str = "greedy",
+                     moe_impl: str = "gmm"):
+    """decode_step(params, state, tokens [B,1], positions [B,1])
+    -> (next_tokens [B,1], logits [B,1,V], new_state)."""
+
+    def decode_step(params, state, tokens, positions):
+        kw = {bundle.state_kwarg: state}
+        logits, new_state, _ = bundle.forward(
+            params, tokens, positions=positions, moe_impl=moe_impl, **kw)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, logits, new_state
+
+    return decode_step
+
+
+def make_prefill(bundle: ModelBundle, *, moe_impl: str = "gmm"):
+    """prefill(params, state, tokens [B,T]) -> (last_logits, new_state)."""
+
+    def prefill(params, state, tokens, **extra):
+        kw = {bundle.state_kwarg: state}
+        logits, new_state, _ = bundle.forward(
+            params, tokens, moe_impl=moe_impl, **kw, **extra)
+        return logits[:, -1:], new_state
+
+    return prefill
+
+
+def generate(bundle: ModelBundle, params, prompt, max_new: int,
+             max_len: int, moe_impl: str = "gmm"):
+    """Greedy autoregressive generation (reference host loop)."""
+    B, T = prompt.shape
+    state = bundle.init_decode_state(B, max_len)
+    prefill = make_prefill(bundle, moe_impl=moe_impl)
+    step = make_decode_step(bundle, moe_impl=moe_impl)
+
+    logits, state = prefill(params, state, prompt)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        pos = jnp.full((B, 1), T + i, jnp.int32)
+        tok, _, state = step(params, state, tok, pos)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,130 @@
+"""Training step: loss, grad, AdamW update — one jittable function.
+
+Supports gradient accumulation (microbatching) via ``lax.scan`` and the
+optional int8 gradient-compression path (repro.distributed.collectives).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import ModelBundle
+from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
+
+_EXTRA_KEYS = ("frame_embeds", "vision_embeds", "mrope_pos")
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    step: jnp.ndarray
+
+
+def init_train_state(bundle: ModelBundle, rng) -> TrainState:
+    params = bundle.init_params(rng)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def cross_entropy(logits, labels, chunk: int = 512):
+    """Mean token CE in fp32. labels < 0 are masked.
+
+    Sharding-friendly + memory-bounded:
+      * the gold logit is selected with an iota==label mask + sum instead of
+        take_along_axis (a gather over a model-sharded vocab makes GSPMD
+        all-gather the logits; the masked reduction partitions cleanly);
+      * the sequence dim is processed in checkpointed chunks so the fp32
+        upcast of [B, T, V] never materializes whole (measured: multiple
+        2.5 GB/device fp32 copies on a 151936-vocab at T=4096 otherwise).
+    """
+
+    def ce_chunk(lg, lb):
+        lf = lg.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lf, axis=-1)
+        vocab_iota = lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        sel = (vocab_iota == lb[..., None]).astype(jnp.float32)
+        gold = jnp.sum(lf * sel, axis=-1)
+        nll = logz - gold
+        mask = (lb >= 0).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    ce_chunk = jax.checkpoint(ce_chunk)
+    T = logits.shape[1]
+    n = max(T // chunk, 1)
+    csize = T // n
+    tot, cnt = jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+    for i in range(n):
+        sl = slice(i * csize, (i + 1) * csize if i < n - 1 else T)
+        s, c = ce_chunk(logits[:, sl], labels[:, sl])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(bundle: ModelBundle, moe_impl: str = "gmm"):
+    def loss_fn(params, batch):
+        kw = {k: batch[k] for k in _EXTRA_KEYS if k in batch}
+        logits, _, aux = bundle.forward(params, batch["tokens"],
+                                        moe_impl=moe_impl, **kw)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux, (ce, aux)
+    return loss_fn
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig, *,
+                    moe_impl: str = "gmm", microbatches: int = 1,
+                    grad_acc_specs=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over equal splits of the
+    batch's leading dim (sequential remat-friendly schedule).
+    ``grad_acc_specs``: optional PartitionSpec tree for the fp32 gradient
+    accumulator (ZeRO-style data-axis sharding; see distributed.sharding).
+    """
+    loss_fn = make_loss_fn(bundle, moe_impl)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain(tree):
+        if grad_acc_specs is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, grad_acc_specs)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, (ce, aux)), grads = grad_fn(state.params, batch)
+        else:
+            m = microbatches
+
+            def split(key, x):
+                if key == "mrope_pos":        # [3, B, S]: batch is dim 1
+                    y = x.reshape((x.shape[0], m, x.shape[1] // m)
+                                  + x.shape[2:])
+                    return jnp.moveaxis(y, 1, 0)
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            mb = {k: split(k, v) for k, v in batch.items()}
+            zeros = _constrain(jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), state.params))
+
+            def acc(carry, mbatch):
+                g_acc, l_acc, c_acc, a_acc = carry
+                (l, (c, a)), g = grad_fn(state.params, mbatch)
+                g_acc = _constrain(jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g))
+                return (g_acc, l_acc + l, c_acc + c, a_acc + a), None
+
+            (grads, loss, ce, aux), _ = lax.scan(
+                acc, (zeros, 0.0, 0.0, 0.0), mb)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, ce, aux = loss * inv, ce * inv, aux * inv
+
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for the host power model and Algorithm 3."""
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy_model as em
+from repro.core.load_control import load_control
+from repro.core.types import CpuProfile, SLA
+
+CPU = CpuProfile()
+SLA0 = SLA()
+
+cores_st = st.integers(min_value=1, max_value=CPU.num_cores)
+freq_st = st.integers(min_value=0, max_value=len(CPU.freq_levels_ghz) - 1)
+util_st = st.floats(min_value=0.0, max_value=1.0)
+tput_st = st.floats(min_value=0.0, max_value=2000.0)
+load_st = st.floats(min_value=0.0, max_value=1.0)
+
+
+@given(cores_st, freq_st, util_st, tput_st)
+@settings(max_examples=60, deadline=None)
+def test_power_positive_and_monotone_in_util(c, f, u, t):
+    cj = jnp.int32(c)
+    _, fg = em.operating_point(CPU, cj, jnp.int32(f))
+    p1 = float(em.power_w(CPU, cj, fg, jnp.float32(u), jnp.float32(t)))
+    p2 = float(em.power_w(CPU, cj, fg, jnp.float32(min(u + 0.1, 1.0)),
+                          jnp.float32(t)))
+    assert p1 > 0
+    assert p2 >= p1 - 1e-5
+
+
+@given(cores_st, freq_st)
+@settings(max_examples=40, deadline=None)
+def test_power_monotone_in_frequency(c, f):
+    if f + 1 >= len(CPU.freq_levels_ghz):
+        return
+    cj = jnp.int32(c)
+    _, f1 = em.operating_point(CPU, cj, jnp.int32(f))
+    _, f2 = em.operating_point(CPU, cj, jnp.int32(f + 1))
+    p1 = float(em.power_w(CPU, cj, f1, jnp.float32(1.0), jnp.float32(100.0)))
+    p2 = float(em.power_w(CPU, cj, f2, jnp.float32(1.0), jnp.float32(100.0)))
+    assert p2 > p1
+
+
+@given(cores_st, freq_st)
+@settings(max_examples=40, deadline=None)
+def test_capacity_monotone_in_cores_and_freq(c, f):
+    _, fg = em.operating_point(CPU, jnp.int32(c), jnp.int32(f))
+    cap1 = float(em.cpu_capacity_mbps(CPU, jnp.int32(c), fg, jnp.float32(4.0)))
+    if c < CPU.num_cores:
+        cap2 = float(em.cpu_capacity_mbps(CPU, jnp.int32(c + 1), fg,
+                                          jnp.float32(4.0)))
+        assert cap2 > cap1
+    assert cap1 > 0
+
+
+def test_more_cores_lower_freq_beats_fewer_cores_higher_freq():
+    """The energy rationale of Algorithm 3: at equal IPS, (2c, f) draws less
+    power than (c, 2f) because dynamic power is cubic in f."""
+    tput = 200.0
+    p_wide = float(em.power_w(CPU, jnp.int32(4), jnp.float32(1.5),
+                              jnp.float32(1.0), jnp.float32(tput)))
+    p_fast = float(em.power_w(CPU, jnp.int32(2), jnp.float32(3.0),
+                              jnp.float32(1.0), jnp.float32(tput)))
+    assert p_wide < p_fast
+
+
+@given(load_st, cores_st, freq_st)
+@settings(max_examples=80, deadline=None)
+def test_load_control_bounds_and_direction(load, c, f):
+    c2, f2 = load_control(CPU, SLA0, jnp.float32(load), jnp.int32(c),
+                          jnp.int32(f))
+    c2, f2 = int(c2), int(f2)
+    assert 1 <= c2 <= CPU.num_cores
+    assert 0 <= f2 <= len(CPU.freq_levels_ghz) - 1
+    if load > SLA0.max_load:            # scale up, cores first
+        if c < CPU.num_cores:
+            assert c2 == c + 1 and f2 == f
+        elif f < len(CPU.freq_levels_ghz) - 1:
+            assert f2 == f + 1 and c2 == c
+    elif load < SLA0.min_load:          # scale down, frequency first
+        if f > 0:
+            assert f2 == f - 1 and c2 == c
+        elif c > 1:
+            assert c2 == c - 1
+    else:                                # in band: no change
+        assert (c2, f2) == (c, f)

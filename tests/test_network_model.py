@@ -1,0 +1,89 @@
+"""Property tests for the transfer-channel simulator + Algorithm 1."""
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heuristics, network_model as nm
+from repro.core.types import (CHAMELEON, CpuProfile, DatasetSpec, MIXED,
+                              NetworkProfile, SLA, SLAPolicy)
+
+CPU = CpuProfile()
+
+
+@given(st.floats(0.05, 8.0), st.floats(0.01, 256.0), st.floats(1.0, 64.0),
+       st.floats(1.0, 16.0))
+@settings(max_examples=60, deadline=None)
+def test_channel_rate_positive_and_pp_monotone(win, fsize, pp, par):
+    r1 = float(nm.channel_rate(CHAMELEON, jnp.float32(win),
+                               jnp.float32(fsize), jnp.float32(pp),
+                               jnp.float32(par)))
+    r2 = float(nm.channel_rate(CHAMELEON, jnp.float32(win),
+                               jnp.float32(fsize), jnp.float32(pp + 1),
+                               jnp.float32(par)))
+    assert r1 > 0
+    assert r2 >= r1 - 1e-6          # pipelining never hurts
+
+
+@given(st.floats(1.0, 256.0))
+@settings(max_examples=40, deadline=None)
+def test_contention_efficiency_bounded_and_decreasing(ch):
+    e1 = float(nm.contention_efficiency(CHAMELEON, jnp.float32(ch),
+                                        jnp.float32(2.0)))
+    e2 = float(nm.contention_efficiency(CHAMELEON, jnp.float32(ch * 2),
+                                        jnp.float32(2.0)))
+    assert 0.0 < e1 <= 1.0
+    assert e2 <= e1 + 1e-6
+
+
+def test_parallelism_capped_by_buffer_ratio():
+    """par beyond avg_file/buffer adds nothing (paper §II / Ismail flaw)."""
+    win, fsize = jnp.float32(2.0), jnp.float32(16.0)
+    prof = CHAMELEON  # buffer 8MB -> cap = 2
+    r2 = float(nm.channel_rate(prof, win, fsize, jnp.float32(1.0),
+                               jnp.float32(2.0)))
+    r8 = float(nm.channel_rate(prof, win, fsize, jnp.float32(1.0),
+                               jnp.float32(8.0)))
+    assert r8 == r2
+
+
+def test_alg1_initialization_shapes_and_sla():
+    for pol, cores in ((SLAPolicy.MIN_ENERGY, 1),
+                       (SLAPolicy.MAX_THROUGHPUT, CPU.num_cores)):
+        params, chunked = heuristics.initialize(
+            MIXED, CHAMELEON, CPU, SLA(policy=pol))
+        assert params.pp.shape == (3,)
+        assert int(params.cores) == cores
+        assert int(params.freq_idx) == 0          # both SLAs start at fmin
+        # large files got split to <= BDP
+        assert all(s.avg_file_mb <= CHAMELEON.bdp_mb + 1e-6 for s in chunked)
+
+
+def test_alg1_splits_large_files_into_bdp_chunks():
+    big = DatasetSpec("big", 10, 4000.0, 400.0)
+    spec, par = heuristics.split_large_files(big, CHAMELEON.bdp_mb)
+    assert par == 10.0                             # 400MB / 40MB BDP
+    assert spec.avg_file_mb <= CHAMELEON.bdp_mb
+    assert spec.total_mb == big.total_mb
+
+
+def test_redistribute_follows_remaining_bytes():
+    cc = heuristics.redistribute_channels(
+        jnp.float32(10.0), jnp.asarray([300.0, 100.0, 0.0], jnp.float32))
+    assert float(cc[0]) > float(cc[1])
+    assert float(cc[2]) == 0.0                     # finished partition
+    assert float(jnp.sum(cc)) <= 10.0 + 1e-4
+
+
+@given(st.floats(0.1, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_sim_step_conserves_bytes(dt):
+    state = nm.init_state(jnp.asarray([100.0, 50.0]), CHAMELEON)
+    from repro.core.types import TransferParams
+    p = TransferParams(pp=jnp.ones(2), par=jnp.ones(2),
+                       cc=jnp.asarray([2.0, 2.0]),
+                       cores=jnp.int32(4), freq_idx=jnp.int32(3))
+    s2, out = nm.step(CHAMELEON, CPU, state, p,
+                      jnp.asarray([1.0, 1.0]), dt, jnp.float32(1.0))
+    assert float(jnp.sum(s2.remaining_mb)) <= 150.0 + 1e-4
+    assert float(s2.remaining_mb.min()) >= 0.0
+    assert float(out.tput_mbps) <= CHAMELEON.bandwidth_mbps + 1e-3
+    assert float(s2.energy_j) > 0.0

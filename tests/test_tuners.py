@@ -1,0 +1,159 @@
+"""Unit tests: the FSM tuners follow Algorithms 4-6 transition-by-transition."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fsm, tuners
+from repro.core.types import CHAMELEON, CpuProfile, SLA, SLAPolicy
+
+CPU = CpuProfile()
+
+
+def meas(tput=500.0, energy=50.0, power=50.0, remaining=1000.0, load=0.5):
+    return tuners.Measurement(
+        avg_tput=jnp.float32(tput), energy_j=jnp.float32(energy),
+        avg_power=jnp.float32(power), remaining_mb=jnp.float32(remaining),
+        cpu_load=jnp.float32(load), interval_s=jnp.float32(1.0))
+
+
+def mk_state(state=fsm.INCREASE, num_ch=8.0, ref=500.0):
+    ts = tuners.init_tuner_state(num_ch, 2, 1)
+    return ts._replace(fsm=jnp.int32(state), ref=jnp.float32(ref))
+
+
+# --------------------------------------------------------------- EEMT -----
+
+def test_eemt_increase_on_positive_feedback():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, alpha=0.1, beta=0.05, delta_ch=2)
+    ts = mk_state(fsm.INCREASE, 8.0, ref=500.0)
+    out = tuners.eemt_update(ts, meas(tput=600.0), sla)   # +20% > beta
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == 10.0
+    assert float(out.ref) == 600.0                        # refTput ratchets
+
+
+def test_eemt_neutral_feedback_no_change():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT)
+    ts = mk_state(fsm.INCREASE, 8.0, ref=500.0)
+    out = tuners.eemt_update(ts, meas(tput=510.0), sla)   # within band
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == 8.0
+    assert float(out.ref) == 500.0
+
+
+def test_eemt_negative_feedback_warns_then_recovers():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, alpha=0.1, delta_ch=2)
+    ts = mk_state(fsm.INCREASE, 8.0, ref=500.0)
+    out = tuners.eemt_update(ts, meas(tput=400.0), sla)   # -20% < -alpha
+    assert int(out.fsm) == fsm.WARNING
+    assert float(out.num_ch) == 8.0                       # no change yet
+    # second negative -> reduce channels, RECOVERY
+    out2 = tuners.eemt_update(out, meas(tput=400.0), sla)
+    assert int(out2.fsm) == fsm.RECOVERY
+    assert float(out2.num_ch) == 6.0
+
+
+def test_eemt_warning_back_to_increase_if_transient():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT)
+    ts = mk_state(fsm.WARNING, 8.0, ref=500.0)
+    out = tuners.eemt_update(ts, meas(tput=490.0), sla)   # >= (1-a)*ref
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == 8.0
+
+
+def test_eemt_recovery_restore_and_rebase_on_bandwidth_drop():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, delta_ch=2)
+    ts = mk_state(fsm.RECOVERY, 6.0, ref=500.0)
+    out = tuners.eemt_update(ts, meas(tput=300.0), sla)   # still bad
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == 8.0                       # restored
+    assert float(out.ref) == 300.0                        # rebased
+
+
+def test_eemt_recovery_keeps_reduction_if_it_helped():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, delta_ch=2)
+    ts = mk_state(fsm.RECOVERY, 6.0, ref=500.0)
+    out = tuners.eemt_update(ts, meas(tput=520.0), sla)
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == 6.0
+
+
+def test_eemt_max_ch_cap():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, delta_ch=4, max_ch=10)
+    ts = mk_state(fsm.INCREASE, 9.0, ref=100.0)
+    out = tuners.eemt_update(ts, meas(tput=200.0), sla)
+    assert float(out.num_ch) == 10.0
+
+
+# ----------------------------------------------------------------- ME -----
+
+def test_me_metric_is_last_plus_future():
+    m = meas(tput=100.0, energy=40.0, power=20.0, remaining=1000.0)
+    got = float(tuners._me_metric(m))
+    assert got == pytest.approx(40.0 + 20.0 * (1000.0 / 100.0))
+
+
+def test_me_increase_on_energy_improvement():
+    sla = SLA(policy=SLAPolicy.MIN_ENERGY, alpha=0.1, delta_ch=2)
+    ts = mk_state(fsm.INCREASE, 4.0, ref=1000.0)
+    m = meas(tput=100.0, energy=40.0, power=20.0, remaining=1000.0)  # m=240
+    out = tuners.me_update(ts, m, sla)
+    assert float(out.num_ch) == 6.0
+    assert float(out.ref) == pytest.approx(240.0)
+
+
+def test_me_warning_on_energy_spike():
+    sla = SLA(policy=SLAPolicy.MIN_ENERGY, beta=0.05)
+    ts = mk_state(fsm.INCREASE, 4.0, ref=100.0)
+    m = meas(tput=10.0, energy=40.0, power=20.0, remaining=1000.0)  # m=2040
+    out = tuners.me_update(ts, m, sla)
+    assert int(out.fsm) == fsm.WARNING
+
+
+# ---------------------------------------------------------------- EETT ----
+
+def test_eett_within_band_stays_increase():
+    sla = SLA(policy=SLAPolicy.TARGET_THROUGHPUT, target_tput_mbps=500.0)
+    ts = mk_state(fsm.INCREASE, 8.0)
+    out = tuners.eett_update(ts, meas(tput=510.0), sla)
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == 8.0
+
+
+def test_eett_overshoot_then_reduce():
+    sla = SLA(policy=SLAPolicy.TARGET_THROUGHPUT, target_tput_mbps=500.0,
+              beta=0.05, delta_ch=2)
+    ts = mk_state(fsm.INCREASE, 8.0)
+    out = tuners.eett_update(ts, meas(tput=600.0), sla)
+    assert int(out.fsm) == fsm.RECOVERY
+    out2 = tuners.eett_update(out, meas(tput=600.0), sla)
+    assert int(out2.fsm) == fsm.INCREASE
+    assert float(out2.num_ch) == 6.0
+
+
+def test_eett_undershoot_then_add():
+    sla = SLA(policy=SLAPolicy.TARGET_THROUGHPUT, target_tput_mbps=500.0,
+              alpha=0.1, delta_ch=2)
+    ts = mk_state(fsm.RECOVERY, 8.0)
+    out = tuners.eett_update(ts, meas(tput=300.0), sla)
+    assert float(out.num_ch) == 10.0
+    assert int(out.fsm) == fsm.INCREASE
+
+
+# ----------------------------------------------------------- slow start ---
+
+def test_slow_start_corrects_channel_estimate():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
+    ts = tuners.init_tuner_state(4.0, 2, 0)
+    m = meas(tput=CHAMELEON.bandwidth_mbps / 4.0)   # only 1/4 of pipe used
+    out = tuners.slow_start(ts, m, CHAMELEON, sla)
+    assert int(out.fsm) == fsm.INCREASE
+    assert float(out.num_ch) == pytest.approx(16.0)  # 4 * 4x correction
+    assert float(out.ref) == pytest.approx(float(m.avg_tput))
+
+
+def test_update_dispatches_slow_start_first():
+    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT)
+    ts = tuners.init_tuner_state(4.0, 2, 0)
+    assert int(ts.fsm) == fsm.SLOW_START
+    out = tuners.update(ts, meas(), CHAMELEON, CPU, sla)
+    assert int(out.fsm) == fsm.INCREASE

@@ -2,38 +2,51 @@
 80/60/40/20% of the theoretical bandwidth on Chameleon + CloudLab, mixed
 dataset.  DIDCLab is excluded as in the paper (low bandwidth).
 
-Rows: fig3/<testbed>/<target-frac>/<algo>.
+All targets of one algorithm share a compiled executable: the target is a
+traced SLA scalar, so ``repro.api.sweep`` vmaps the 4-fraction column.
+
+Rows: fig3/<testbed>/<target-frac>/<algo>.  The us_per_call column is
+grid-amortized (sweep total / cells) — see benchmarks.common.
 """
 from __future__ import annotations
 
-from repro.core import MIXED, SLA, SLAPolicy, CpuProfile, simulate
+from repro import api
+from repro.core import MIXED, CpuProfile
 
-from .common import TESTBEDS, emit, timed
+from .common import TESTBEDS, budget_for, emit, timed_sweep
 
 CPU = CpuProfile()
 FRACS = (0.8, 0.6, 0.4, 0.2)
 
 
 def run(rows=None):
-    results = {}
+    cells, scenarios = [], []
     for tb in ("chameleon", "cloudlab"):
         prof = TESTBEDS[tb]
+        budget = budget_for(prof)
         for frac in FRACS:
             tgt = prof.bandwidth_mbps * frac
-            for pol, name in ((SLAPolicy.TARGET_THROUGHPUT, "EETT"),
-                              (SLAPolicy.ISMAIL_TARGET, "ismail-target")):
-                sla = SLA(policy=pol, target_tput_mbps=tgt, max_ch=64)
-                r, secs = timed(simulate, prof, CPU, MIXED, sla,
-                                total_s=28800.0 if prof.bandwidth_mbps < 500
-                                else 7200.0)
-                err = abs(r.avg_tput_mbps - tgt) / tgt
-                tag = f"fig3/{tb}/{int(frac * 100)}pct/{name}"
-                emit(tag, secs,
-                     f"{r.avg_tput_gbps:.3f}Gbps;target_err={err:.2f};"
-                     f"{r.energy_j:.0f}J")
-                results[(tb, frac, name)] = r
-                if rows is not None:
-                    rows.append((tag, r))
+            for ctrl_name, name in (("EETT", "EETT"),
+                                    ("ismail-target", "ismail-target")):
+                ctrl = api.make_controller(ctrl_name, target_tput_mbps=tgt,
+                                           max_ch=64)
+                cells.append((tb, frac, name, tgt))
+                scenarios.append(api.Scenario(
+                    profile=prof, datasets=MIXED, controller=ctrl, cpu=CPU,
+                    total_s=budget))
+
+    swept, secs = timed_sweep(scenarios)
+
+    results = {}
+    for (tb, frac, name, tgt), r in zip(cells, swept):
+        err = abs(r.avg_tput_mbps - tgt) / tgt
+        tag = f"fig3/{tb}/{int(frac * 100)}pct/{name}"
+        emit(tag, secs,
+             f"{r.avg_tput_gbps:.3f}Gbps;target_err={err:.2f};"
+             f"{r.energy_j:.0f}J")
+        results[(tb, frac, name)] = r
+        if rows is not None:
+            rows.append((tag, r))
     return results
 
 

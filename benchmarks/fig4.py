@@ -2,41 +2,46 @@
 ME and EEMT with and without the Algorithm-3 load-control module, vs the
 Alan/Ismail static tuners, mixed dataset, all 3 testbeds.
 
-Rows: fig4/<testbed>/<algo>[-noscale].
+Rows: fig4/<testbed>/<algo>[-noscale].  The us_per_call column is
+grid-amortized (sweep total / cells) — see benchmarks.common.
 """
 from __future__ import annotations
 
-from repro.core import MIXED, SLA, SLAPolicy, CpuProfile, simulate
-from repro.core.baselines import BASELINE_BUILDERS
+from repro import api
+from repro.core import MIXED, CpuProfile
 
-from .common import TESTBEDS, emit, timed
+from .common import TESTBEDS, budget_for, emit, timed_sweep
 
 CPU = CpuProfile()
 
 
 def run(rows=None):
-    results = {}
+    cells, scenarios = [], []
     for tb, prof in TESTBEDS.items():
-        budget = 28800.0 if prof.bandwidth_mbps < 500 else 7200.0
-        for pol, name in ((SLAPolicy.MIN_ENERGY, "ME"),
-                          (SLAPolicy.MAX_THROUGHPUT, "EEMT")):
+        budget = budget_for(prof)
+        for name in ("ME", "EEMT"):
             for scaling in (True, False):
-                sla = SLA(policy=pol, max_ch=64)
-                r, secs = timed(simulate, prof, CPU, MIXED, sla,
-                                total_s=budget, scaling=scaling)
-                tag = f"fig4/{tb}/{name}{'' if scaling else '-noscale'}"
-                emit(tag, secs, f"{r.energy_j:.0f}J;{r.avg_tput_gbps:.3f}Gbps")
-                results[(tb, name, scaling)] = r
-                if rows is not None:
-                    rows.append((tag, r))
+                ctrl = api.make_controller(name, max_ch=64, scaling=scaling)
+                cells.append((tb, name, scaling))
+                scenarios.append(api.Scenario(
+                    profile=prof, datasets=MIXED, controller=ctrl, cpu=CPU,
+                    total_s=budget))
         for base in ("ismail-min-energy", "ismail-max-tput"):
-            ctrl = BASELINE_BUILDERS[base](MIXED, prof, CPU)
-            r, secs = timed(simulate, prof, CPU, MIXED, ctrl, total_s=budget)
-            tag = f"fig4/{tb}/{base}"
-            emit(tag, secs, f"{r.energy_j:.0f}J;{r.avg_tput_gbps:.3f}Gbps")
-            results[(tb, base, None)] = r
-            if rows is not None:
-                rows.append((tag, r))
+            cells.append((tb, base, None))
+            scenarios.append(api.Scenario(
+                profile=prof, datasets=MIXED, controller=base, cpu=CPU,
+                total_s=budget))
+
+    swept, secs = timed_sweep(scenarios)
+
+    results = {}
+    for (tb, name, scaling), r in zip(cells, swept):
+        suffix = "" if scaling in (True, None) else "-noscale"
+        tag = f"fig4/{tb}/{name}{suffix}"
+        emit(tag, secs, f"{r.energy_j:.0f}J;{r.avg_tput_gbps:.3f}Gbps")
+        results[(tb, name, scaling)] = r
+        if rows is not None:
+            rows.append((tag, r))
     return results
 
 

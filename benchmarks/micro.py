@@ -11,7 +11,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import CHAMELEON, MIXED, SLA, SLAPolicy, CpuProfile, simulate
+from repro import api
+from repro.core import CHAMELEON, MIXED, CpuProfile
 
 from .common import emit
 
@@ -20,12 +21,14 @@ CPU = CpuProfile()
 
 def bench_engine(rows=None):
     """One full simulated transfer (jit warm) — engine steps/second."""
-    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
-    simulate(CHAMELEON, CPU, MIXED, sla, total_s=600.0)      # warm
+    sc = api.Scenario(profile=CHAMELEON, datasets=MIXED,
+                      controller=api.make_controller("eemt", max_ch=64),
+                      cpu=CPU, total_s=600.0)
+    api.run(sc)                                               # warm
     t0 = time.perf_counter()
     n = 3
     for _ in range(n):
-        simulate(CHAMELEON, CPU, MIXED, sla, total_s=600.0)
+        api.run(sc)
     dt = (time.perf_counter() - t0) / n
     steps = 6000
     emit("micro/engine_transfer", dt, f"{steps / dt:.0f}steps_per_s")
@@ -34,26 +37,19 @@ def bench_engine(rows=None):
 def bench_vmap_sweep(rows=None):
     """Parameter sweep via vmap: K simultaneous simulations in one XLA call
     (the JAX-native replacement for the paper's sequential experiments)."""
-    from repro.core import engine, heuristics, network_model, tuners
-    from repro.core.types import TransferParams
+    from repro.core import engine
 
     K = 64
     n_steps = 2000
-    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
-    params, chunked = heuristics.initialize(MIXED, CHAMELEON, CPU, sla)
-    files = jnp.asarray([s.avg_file_mb for s in chunked])
-    totals = jnp.asarray([s.total_mb for s in chunked])
-
-    step = engine.make_step_fn(
-        CHAMELEON, CPU, sla, files, params.pp, params.par, dt=0.1,
-        ctrl_every=10, scaling=True, tuned=True)
+    ctrl = api.make_controller("eemt", max_ch=64)
+    ci = ctrl.init(MIXED, CHAMELEON, CPU)
+    base = engine.ScanInputs.from_init(ci, CHAMELEON, n_steps)
+    core = engine.build_core(ctrl.code(), CPU, n_steps=n_steps, dt=0.1,
+                             ctrl_every=10)
 
     def one(num_ch0):
-        sim0 = network_model.init_state(totals, CHAMELEON)
-        ts0 = tuners.init_tuner_state(num_ch0, 2, 1)
-        xs = (jnp.arange(n_steps, dtype=jnp.int32),
-              jnp.ones((n_steps,), jnp.float32))
-        (sim, ts), _ = jax.lax.scan(step, (sim0, ts0), xs)
+        ts0 = base.state0._replace(num_ch=num_ch0, prev_num_ch=num_ch0)
+        sim, _, _ = core(base._replace(state0=ts0))
         return sim.energy_j
 
     sweep = jax.jit(jax.vmap(one))

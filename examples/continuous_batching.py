@@ -1,15 +1,14 @@
 """Continuous-batching serving with SLA admission control.
 
-    PYTHONPATH=src python examples/continuous_batching.py
+    pip install -e .          (or: export PYTHONPATH=src)
+    python examples/continuous_batching.py
 
 Twelve requests of mixed prompt lengths stream through a 4-slot batcher;
 the paper's controller governs how many slots are admitted (the serving
 analogue of transfer-channel concurrency).
 """
-import sys
 import time
 
-sys.path.insert(0, "src")
 
 import jax
 import numpy as np

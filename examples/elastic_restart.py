@@ -1,12 +1,11 @@
 """Fault tolerance demo: train, die mid-run, restart, resume exactly.
 
-    PYTHONPATH=src python examples/elastic_restart.py
+    pip install -e .          (or: export PYTHONPATH=src)
+    python examples/elastic_restart.py
 """
 import shutil
-import sys
 import tempfile
 
-sys.path.insert(0, "src")
 
 from repro.data import SyntheticSource, batches
 from repro.models import build

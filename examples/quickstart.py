@@ -1,36 +1,33 @@
 """Quickstart: the paper's SLA tuners in 30 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .          (or: export PYTHONPATH=src)
+    python examples/quickstart.py
 
 Runs the mixed dataset (Table II) over the simulated Chameleon testbed
-(Table I) with every controller and prints the Fig.2-style comparison.
+(Table I) with every registered controller and prints the Fig.2-style
+comparison — the whole grid goes through one batched ``api.sweep`` call.
 """
-import sys
+from repro import api
+from repro.core import CHAMELEON, MIXED
 
-sys.path.insert(0, "src")
+BASELINES = ("wget/curl", "http/2", "ismail-min-energy", "ismail-max-tput")
 
-from repro.core import (CHAMELEON, MIXED, SLA, SLAPolicy, CpuProfile,
-                        simulate)
-from repro.core.baselines import BASELINE_BUILDERS
+scenarios = [api.Scenario(profile=CHAMELEON, datasets=MIXED, controller=name,
+                          total_s=7200.0) for name in BASELINES]
+for name in ("ME", "EEMT"):
+    scenarios.append(api.Scenario(
+        profile=CHAMELEON, datasets=MIXED,
+        controller=api.make_controller(name, max_ch=64), total_s=1800.0))
+scenarios.append(api.Scenario(
+    profile=CHAMELEON, datasets=MIXED,
+    controller=api.make_controller(
+        "eett", target_tput_mbps=CHAMELEON.bandwidth_mbps * 0.4, max_ch=64),
+    total_s=2400.0))
 
-cpu = CpuProfile()
+rows = api.sweep(scenarios)
 
 print(f"{'controller':20s} {'time':>8s} {'energy':>9s} {'tput':>9s} {'power':>8s}")
 print("-" * 60)
-
-rows = []
-for name, build in BASELINE_BUILDERS.items():
-    rows.append(simulate(CHAMELEON, cpu, MIXED,
-                         build(MIXED, CHAMELEON, cpu), total_s=7200))
-for pol in (SLAPolicy.MIN_ENERGY, SLAPolicy.MAX_THROUGHPUT):
-    rows.append(simulate(CHAMELEON, cpu, MIXED,
-                         SLA(policy=pol, max_ch=64), total_s=1800))
-rows.append(simulate(
-    CHAMELEON, cpu, MIXED,
-    SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
-        target_tput_mbps=CHAMELEON.bandwidth_mbps * 0.4, max_ch=64),
-    total_s=2400))
-
 for r in rows:
     print(f"{r.name:20s} {r.time_s:7.1f}s {r.energy_j:8.0f}J "
           f"{r.avg_tput_gbps:7.2f}Gb {r.avg_power_w:7.1f}W")

@@ -1,16 +1,15 @@
 """Batched serving demo: prefill + greedy decode with a KV cache.
 
-    PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-7b]
+    pip install -e .          (or: export PYTHONPATH=src)
+    python examples/serve_decode.py [--arch rwkv6-7b]
 
 Uses the reduced (smoke) config of the chosen architecture so it runs on
 CPU; the same ``serve_step`` is what the decode dry-run cells lower for the
 production mesh.
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

@@ -1,31 +1,33 @@
 """SLA-governed transfer scenarios, including live bandwidth variation.
 
-    PYTHONPATH=src python examples/sla_transfer.py
+    pip install -e .          (or: export PYTHONPATH=src)
+    python examples/sla_transfer.py
 
 Demonstrates:
-  1. the three SLA policies on the same workload,
+  1. the three SLA policies on the same workload (one batched sweep),
   2. the FSM riding out a mid-transfer bandwidth drop (Warning/Recovery),
   3. dynamic frequency & core scaling traces (Algorithm 3 in action).
 """
-import sys
-
-sys.path.insert(0, "src")
-
 import numpy as np
 
-from repro.core import (CHAMELEON, MIXED, SLA, SLAPolicy, CpuProfile,
-                        simulate)
-
-cpu = CpuProfile()
+from repro import api
+from repro.core import CHAMELEON, MIXED
 
 # 1. three SLAs -------------------------------------------------------------
 print("== three SLA policies (Chameleon, mixed dataset) ==")
-for pol, extra in ((SLAPolicy.MIN_ENERGY, {}),
-                   (SLAPolicy.MAX_THROUGHPUT, {}),
-                   (SLAPolicy.TARGET_THROUGHPUT,
-                    {"target_tput_mbps": 500.0})):
-    r = simulate(CHAMELEON, cpu, MIXED, SLA(policy=pol, max_ch=64, **extra),
-                 total_s=2400)
+scenarios = [
+    api.Scenario(profile=CHAMELEON, datasets=MIXED,
+                 controller=api.make_controller("me", max_ch=64),
+                 total_s=2400.0),
+    api.Scenario(profile=CHAMELEON, datasets=MIXED,
+                 controller=api.make_controller("eemt", max_ch=64),
+                 total_s=2400.0),
+    api.Scenario(profile=CHAMELEON, datasets=MIXED,
+                 controller=api.make_controller(
+                     "eett", target_tput_mbps=500.0, max_ch=64),
+                 total_s=2400.0),
+]
+for r in api.sweep(scenarios):
     print(f"  {r.name:6s} time={r.time_s:7.1f}s energy={r.energy_j:7.0f}J "
           f"tput={r.avg_tput_gbps:5.2f}Gbps power={r.avg_power_w:5.1f}W")
 
@@ -34,9 +36,10 @@ print("\n== available bandwidth drops 70% between t=10s and t=60s ==")
 n = int(1800 / 0.1)
 bw = np.ones(n, np.float32)
 bw[100:600] = 0.3
-r = simulate(CHAMELEON, cpu, MIXED, SLA(policy=SLAPolicy.MAX_THROUGHPUT,
-                                        max_ch=64), total_s=1800,
-             bw_schedule=bw)
+r = api.run(api.Scenario(
+    profile=CHAMELEON, datasets=MIXED,
+    controller=api.make_controller("eemt", max_ch=64),
+    total_s=1800.0, bw_schedule=bw))
 m = r.metrics
 t = np.arange(len(m.tput_mbps)) * 0.1
 for t0 in (5, 15, 30, 50, 70, 90):
@@ -49,8 +52,9 @@ print(f"  completed={r.completed} time={r.time_s:.0f}s energy={r.energy_j:.0f}J"
 
 # 3. operating-point trace ---------------------------------------------------
 print("\n== Algorithm-3 operating points over the first 30s (ME) ==")
-r = simulate(CHAMELEON, cpu, MIXED, SLA(policy=SLAPolicy.MIN_ENERGY,
-                                        max_ch=64), total_s=1800)
+r = api.run(api.Scenario(
+    profile=CHAMELEON, datasets=MIXED,
+    controller=api.make_controller("me", max_ch=64), total_s=1800.0))
 m = r.metrics
 for t0 in (1, 3, 5, 10, 20, 30):
     i = int(t0 / 0.1)

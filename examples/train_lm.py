@@ -1,17 +1,14 @@
 """End-to-end training driver: LM training with the paper's SLA-tuned
 ingest pipeline, checkpoint/restart, and straggler accounting.
 
-    PYTHONPATH=src python examples/train_lm.py --steps 300            # ~12M model
-    PYTHONPATH=src python examples/train_lm.py --steps 300 --full     # ~135M model
+    pip install -e .          (or: export PYTHONPATH=src)
+    python examples/train_lm.py --steps 300            # ~12M model
+    python examples/train_lm.py --steps 300 --full     # ~135M model
 
 On a pod this is the same driver the launcher uses; on CPU the default
 config is reduced so a few hundred steps complete in minutes.
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
-
 import jax
 
 from repro.core.types import SLA, SLAPolicy

@@ -1,0 +1,6 @@
+"""repro — energy-efficient high-throughput transfer tuning (jax).
+
+Public surface lives in :mod:`repro.api`; the paper's algorithms and the
+simulation substrate live in :mod:`repro.core`.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,30 @@
+"""repro.api — the public surface of the library.
+
+One engine substrate, many controllers, compared apples-to-apples:
+
+    >>> from repro import api
+    >>> from repro.core.types import CHAMELEON, MIXED
+    >>> sc = api.Scenario(profile=CHAMELEON, datasets=MIXED,
+    ...                   controller="eemt", total_s=1800.0)
+    >>> result = api.run(sc)
+
+Controllers are addressed by registry name (``api.list_controllers()``) or
+constructed directly; anything implementing the :class:`Controller` protocol
+plugs into the same engine.  ``api.sweep([...])`` groups shape-compatible
+scenarios and executes each group as one ``jax.vmap``-over-``lax.scan`` XLA
+launch instead of N sequential jit calls.
+"""
+from repro.core.engine import TransferResult  # noqa: F401
+
+from .controllers import (Controller, ControllerInit,  # noqa: F401
+                          IsmailTargetController, StaticBaselineController,
+                          TunerController, as_controller, list_controllers,
+                          make_controller, register_controller)
+from .scenario import Scenario, group_count, run, sweep  # noqa: F401
+
+__all__ = [
+    "Controller", "ControllerInit", "IsmailTargetController",
+    "Scenario", "StaticBaselineController", "TransferResult",
+    "TunerController", "as_controller", "group_count", "list_controllers",
+    "make_controller", "register_controller", "run", "sweep",
+]

@@ -1,0 +1,178 @@
+"""Scenario: one declarative transfer experiment; run one, or sweep a grid.
+
+``sweep`` is the headline: it groups scenarios whose compiled code is
+identical (same controller code path, CPU model, step count, tick stride and
+partition count), stacks each group's numeric inputs, and executes the group
+as ONE ``jax.vmap``-over-``lax.scan`` XLA launch.  A 72-cell figure grid
+becomes a handful of compiled executables instead of 72 sequential jit calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.core.engine import ScanInputs, TransferResult
+from repro.core.types import CpuProfile, NetworkProfile
+
+from .controllers import Controller, as_controller
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scenario:
+    """Everything one transfer experiment needs, bundled and frozen.
+
+    ``controller`` accepts anything :func:`as_controller` does — a Controller
+    instance, a registry name ("eemt", "wget/curl", ...), or a legacy SLA /
+    StaticController object.
+
+    ``eq=False``: scenarios may carry an ndarray ``bw_schedule``, so equality
+    and hashing are by identity (array fields would make ``==`` ambiguous).
+    """
+
+    profile: NetworkProfile
+    datasets: tuple
+    controller: Any
+    cpu: CpuProfile = CpuProfile()
+    total_s: float = 3600.0
+    dt: float = 0.1
+    bw_schedule: Optional[Any] = None   # [n_steps] fraction of bandwidth
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "datasets", tuple(self.datasets))
+
+
+class _GroupKey(NamedTuple):
+    """Executable-group key: everything that selects compiled code."""
+
+    ctrl_code: Controller
+    cpu: CpuProfile
+    n_steps: int
+    dt: float
+    ctrl_every: int
+    n_partitions: int
+
+
+def _group_key(ctrl: Controller, sc: Scenario, n_partitions: int) -> _GroupKey:
+    """Single source of truth for both ``_prepare`` (actual grouping) and
+    ``group_count`` (prediction)."""
+    n_steps = int(round(sc.total_s / sc.dt))
+    ctrl_every = (max(int(round(ctrl.timeout_s / sc.dt)), 1)
+                  if ctrl.tunes else 1)
+    return _GroupKey(ctrl.code(), sc.cpu, n_steps, sc.dt, ctrl_every,
+                     n_partitions)
+
+
+class _Prepared(NamedTuple):
+    key: _GroupKey
+    inputs: ScanInputs      # numeric pytree (numpy leaves)
+    name: str
+    total_s: float
+    dt: float
+
+
+def _prepare(sc: Scenario) -> _Prepared:
+    ctrl: Controller = as_controller(sc.controller)
+    ci = ctrl.init(sc.datasets, sc.profile, sc.cpu)
+    key = _group_key(ctrl, sc, len(ci.specs))
+    n_steps = key.n_steps
+
+    inputs = ScanInputs.from_init(ci, sc.profile, n_steps)
+    if sc.bw_schedule is not None:
+        bw = np.asarray(sc.bw_schedule, np.float32)
+        if bw.shape != (n_steps,):
+            raise ValueError(f"bw_schedule shape {bw.shape} != ({n_steps},)")
+        inputs = inputs._replace(bw=bw)
+    inputs = jax.tree.map(np.asarray, inputs)
+    return _Prepared(key=key, inputs=inputs,
+                     name=sc.name or ctrl.name,
+                     total_s=sc.total_s, dt=sc.dt)
+
+
+def _postprocess(sim, metrics, prep: _Prepared) -> TransferResult:
+    m = jax.tree.map(np.asarray, metrics)
+    done = m.done
+    completed = bool(done[-1])
+    if completed:
+        t_done = float(prep.dt * int(np.argmax(done)))
+    else:
+        t_done = float(prep.total_s)
+    energy = float(sim.energy_j)
+    moved = float(sim.bytes_moved)
+    avg_tput = moved / max(t_done, 1e-9)
+    avg_power = energy / max(t_done, 1e-9)
+    return TransferResult(
+        name=prep.name,
+        time_s=t_done,
+        energy_j=energy,
+        avg_tput_mbps=avg_tput,
+        avg_tput_gbps=avg_tput * 8.0 / 1000.0,
+        avg_power_w=avg_power,
+        completed=completed,
+        metrics=m,
+    )
+
+
+def _run_prepared(prep: _Prepared) -> TransferResult:
+    """Execute one prepared scenario on the unbatched cached runner."""
+    k = prep.key
+    runner = engine.get_runner(k.ctrl_code, k.cpu, k.n_steps, k.dt,
+                               k.ctrl_every, batched=False)
+    sim, _, metrics = runner(prep.inputs)
+    return _postprocess(sim, metrics, prep)
+
+
+def run(scenario: Scenario) -> TransferResult:
+    """Run one scenario to completion (or its ``total_s`` timeout)."""
+    return _run_prepared(_prepare(scenario))
+
+
+def sweep(scenarios: Sequence[Scenario]) -> list[TransferResult]:
+    """Run many scenarios, batching shape-compatible ones into one launch.
+
+    Results come back in input order.  Scenarios group when their compiled
+    code is identical; each group of size > 1 executes as one
+    ``vmap(scan)`` call, singletons fall back to the unbatched runner (which
+    shares the per-group cache with :func:`run`).
+    """
+    prepared = [_prepare(sc) for sc in scenarios]
+    groups: dict[_GroupKey, list[int]] = defaultdict(list)
+    for i, prep in enumerate(prepared):
+        groups[prep.key].append(i)
+
+    results: list[Optional[TransferResult]] = [None] * len(prepared)
+    for key, idxs in groups.items():
+        if len(idxs) == 1:
+            results[idxs[0]] = _run_prepared(prepared[idxs[0]])
+            continue
+        runner = engine.get_runner(key.ctrl_code, key.cpu, key.n_steps,
+                                   key.dt, key.ctrl_every, batched=True)
+        stacked = jax.tree.map(lambda *xs: np.stack(xs),
+                               *[prepared[i].inputs for i in idxs])
+        sim, _, metrics = runner(stacked)
+        sim_np = jax.tree.map(np.asarray, sim)
+        metrics_np = jax.tree.map(np.asarray, metrics)
+        for b, i in enumerate(idxs):
+            results[i] = _postprocess(
+                jax.tree.map(lambda x: x[b], sim_np),
+                jax.tree.map(lambda x: x[b], metrics_np),
+                prepared[i])
+    return results
+
+
+def group_count(scenarios: Sequence[Scenario]) -> int:
+    """Number of compiled executables a ``sweep`` over these would need.
+
+    Computes only the group keys — no controller ``init`` or input-array
+    construction — so it is cheap to call before a sweep.  Assumes the
+    controller preserves the partition count (all built-in controllers do;
+    Algorithm-1 chunking splits files *within* partitions, never partitions).
+    """
+    return len({_group_key(as_controller(sc.controller), sc,
+                           len(sc.datasets))
+                for sc in scenarios})

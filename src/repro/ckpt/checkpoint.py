@@ -171,6 +171,17 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
 
+    def final_save(self, step: int, state) -> None:
+        """Blocking save that is never dropped (end-of-run commit).
+
+        ``maybe_save`` sheds requests while a save is in flight, which must
+        not lose the *last* step — drain, save, drain.
+        """
+        self.wait()
+        if self.last_saved != step:
+            self.maybe_save(step, state)
+            self.wait()
+
     def _gc(self):
         steps = available_steps(self.ckpt_dir)
         for s in steps[: -self.keep]:

@@ -8,8 +8,12 @@ Public API:
     load_control  — Algorithm 3 (threshold frequency/core scaling)
     energy_model  — RAPL-calibrated host power model
     network_model — discrete-time WAN channel simulator
-    engine        — scan-based transfer engine (simulate())
+    engine        — scan-based transfer engine substrate
     baselines     — wget/curl, http/2, Alan/Ismail static tuners
+
+The user-facing surface is ``repro.api`` (Controller protocol + registry,
+Scenario, run/sweep).  ``simulate`` below is a deprecated shim kept for
+backwards compatibility.
 """
 from . import (baselines, energy_model, engine, fsm, heuristics,  # noqa: F401
                load_control, network_model, tuners, types)

@@ -17,6 +17,7 @@ apples-to-apples on the same substrate:
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax.numpy as jnp
 
@@ -73,8 +74,8 @@ def _ismail_params(specs, profile: NetworkProfile):
     """
     pp, par, cc = [], [], []
     for s in specs:
-        par.append(max(1.0, float(jnp.floor(s.avg_file_mb / profile.bdp_mb))))
-        pp.append(max(1.0, min(float(jnp.ceil(profile.bdp_mb / max(s.avg_file_mb, 1e-6))), 32.0)))
+        par.append(max(1.0, float(math.floor(s.avg_file_mb / profile.bdp_mb))))
+        pp.append(max(1.0, min(float(math.ceil(profile.bdp_mb / max(s.avg_file_mb, 1e-6))), 32.0)))
         cc.append(max(1.0, min(float(s.num_files), 4.0)))
     return pp, par, cc
 

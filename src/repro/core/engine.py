@@ -1,27 +1,32 @@
 """Transfer engine: one ``lax.scan`` = one full SLA-governed transfer.
 
-Composes the network/energy simulator (network_model) with a controller:
-either one of the paper's SLA tuners (tuners.py — ME / EEMT / EETT with
-Algorithm-3 load control) or a static baseline (baselines.py).
+The engine is a *substrate*: it composes the network/energy simulator
+(network_model) with any object implementing the ``repro.api`` Controller
+protocol.  All controller-specific semantics — which channels each partition
+gets, what happens on a controller tick, whether frequency/core scaling is
+active — live behind that protocol; the engine only drives the clock.
 
-The engine is fully jittable; `vmap(simulate_jit)` sweeps whole parameter
-grids in one XLA launch — this is what the benchmark harness and the §Perf
-hillclimb use.
+Everything numeric (testbed profile, SLA hyper-parameters, dataset sizes,
+initial operating point, bandwidth schedule) arrives as traced ``ScanInputs``
+leaves, so a whole grid of scenarios that share one controller code path runs
+as a single ``jax.vmap``-over-``lax.scan`` XLA launch — see
+``repro.api.sweep``.  Runners are built once per (controller code, cpu,
+n_steps, dt, ctrl_every) group and cached.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import heuristics, network_model, tuners
-from .baselines import StaticController
-from .types import (CpuProfile, DatasetSpec, NetworkProfile, SLA, SLAPolicy,
-                    SimState, TickMetrics, TransferParams, TunerState)
+from . import network_model, tuners
+from .types import (CpuProfile, NetParams, NetworkProfile, SLA, SLAParams,
+                    TickMetrics, TransferParams, TunerState)
 
 
 @dataclasses.dataclass
@@ -42,8 +47,47 @@ class TransferResult:
                 f"{self.avg_tput_gbps:.3f},{self.avg_power_w:.1f}")
 
 
-def _controller_tick(ts: TunerState, sim: SimState, load, profile, cpu, sla,
-                     scaling: bool) -> TunerState:
+class ScanInputs(NamedTuple):
+    """Per-scenario numeric inputs to one engine run (a vmap-able pytree)."""
+
+    net: NetParams         # testbed profile scalars
+    sla: SLAParams         # tuner hyper-parameter scalars
+    pp: jnp.ndarray        # [P] pipelining depth per partition
+    par: jnp.ndarray       # [P] parallelism per partition
+    total_mb: jnp.ndarray  # [P] partition sizes
+    avg_file_mb: jnp.ndarray   # [P] average file (or chunk) size
+    state0: TunerState     # initial controller state (numCh, cores, freq, ..)
+    static_w: jnp.ndarray  # [P] frozen channel weights (controller-specific)
+    bw: jnp.ndarray        # [n_steps] available-bandwidth schedule
+
+    @classmethod
+    def from_init(cls, ci, profile, n_steps: int) -> "ScanInputs":
+        """Assemble inputs from a ``ControllerInit`` + profile, with a flat
+        bandwidth schedule (override ``bw`` via ``_replace`` if needed).
+
+        Leaves built here are host-side (numpy) so batch stacking stays on
+        the host; ``pp``/``par``/``state0`` pass through as the controller
+        produced them (possibly device arrays — ``_prepare`` normalizes with
+        ``np.asarray`` before stacking).
+        """
+        return cls(
+            net=NetParams.from_profile(profile),
+            sla=ci.sla,
+            pp=ci.params.pp,
+            par=ci.params.par,
+            total_mb=np.asarray([s.total_mb for s in ci.specs], np.float32),
+            avg_file_mb=np.asarray([s.avg_file_mb for s in ci.specs],
+                                   np.float32),
+            state0=ci.state,
+            static_w=np.asarray(ci.static_weights, np.float32),
+            bw=np.ones((n_steps,), np.float32),
+        )
+
+
+def _controller_tick(controller, ts: TunerState, sim, load, net, cpu,
+                     sla) -> TunerState:
+    """Assemble the interval measurement, delegate to the controller, reset
+    the accumulators."""
     meas = tuners.Measurement(
         avg_tput=ts.acc_mb / jnp.maximum(ts.acc_s, 1e-6),
         energy_j=ts.acc_j,
@@ -52,37 +96,35 @@ def _controller_tick(ts: TunerState, sim: SimState, load, profile, cpu, sla,
         cpu_load=load,
         interval_s=ts.acc_s,
     )
-    new = tuners.update(ts, meas, profile, cpu, sla, scaling=scaling)
+    new = controller.tick(ts, meas, net, cpu, sla)
     z = jnp.zeros((), jnp.float32)
     return new._replace(acc_mb=z, acc_j=z, acc_s=z)
 
 
-def make_step_fn(profile: NetworkProfile, cpu: CpuProfile, sla: SLA,
-                 avg_file_mb, pp, par, *, dt: float, ctrl_every: int,
-                 scaling: bool, tuned: bool, static_weights=None):
-    """Build the scan step. Static metadata is closed over (hashable)."""
+def _op(cpu, ts):
+    from . import energy_model
+    return energy_model.operating_point(cpu, ts.cores, ts.freq_idx)
+
+
+def make_step_fn(controller, cpu: CpuProfile, inp: ScanInputs, *, dt: float,
+                 ctrl_every: int):
+    """Build the scan step.  ``controller`` supplies the jittable semantics;
+    static metadata (cpu, dt, ctrl_every) is closed over."""
 
     def step(carry, xs):
         sim, ts = carry
         step_idx, bw_scale = xs
 
         done = jnp.sum(sim.remaining_mb) <= 0.0
-        if static_weights is None:
-            cc = heuristics.redistribute_channels(ts.num_ch,
-                                                  sim.remaining_mb)
-        else:
-            # Ismail baseline: channels split by ORIGINAL partition weights
-            # (never rebalanced by remaining bytes — the §V-B critique).
-            w0 = jnp.asarray(static_weights, jnp.float32)
-            active = (sim.remaining_mb > 0.0).astype(jnp.float32)
-            cc = w0 * ts.num_ch * active
-        params = TransferParams(pp=pp, par=par, cc=cc,
+        cc = controller.channels(ts, sim, inp.static_w)
+        params = TransferParams(pp=inp.pp, par=inp.par, cc=cc,
                                 cores=ts.cores, freq_idx=ts.freq_idx)
 
-        sim2, out = network_model.step(profile, cpu, sim, params,
-                                       avg_file_mb, dt, bw_scale)
+        sim2, out = network_model.step(inp.net, cpu, sim, params,
+                                       inp.avg_file_mb, dt, bw_scale)
         # Freeze the world once the transfer has completed.
-        sim2 = jax.tree.map(lambda new, old: jnp.where(done, old, new), sim2, sim)
+        sim2 = jax.tree.map(lambda new, old: jnp.where(done, old, new),
+                            sim2, sim)
         sim2 = sim2._replace(t=sim.t + dt)
 
         live = jnp.logical_not(done)
@@ -92,12 +134,13 @@ def make_step_fn(profile: NetworkProfile, cpu: CpuProfile, sla: SLA,
             acc_s=ts.acc_s + dt * live,
         )
 
-        if tuned:
-            is_ctrl = jnp.logical_and((step_idx % ctrl_every) == ctrl_every - 1,
-                                      live)
-            ts_new = _controller_tick(ts, sim2, out.cpu_load, profile, cpu,
-                                      sla, scaling)
-            ts = jax.tree.map(lambda n, o: jnp.where(is_ctrl, n, o), ts_new, ts)
+        if controller.tunes:
+            is_ctrl = jnp.logical_and(
+                (step_idx % ctrl_every) == ctrl_every - 1, live)
+            ts_new = _controller_tick(controller, ts, sim2, out.cpu_load,
+                                      inp.net, cpu, inp.sla)
+            ts = jax.tree.map(lambda n, o: jnp.where(is_ctrl, n, o),
+                              ts_new, ts)
 
         _, f = _op(cpu, ts)
         metrics = TickMetrics(
@@ -110,31 +153,39 @@ def make_step_fn(profile: NetworkProfile, cpu: CpuProfile, sla: SLA,
     return step
 
 
-def _op(cpu, ts):
-    from . import energy_model
-    return energy_model.operating_point(cpu, ts.cores, ts.freq_idx)
+def build_core(controller, cpu: CpuProfile, *, n_steps: int, dt: float,
+               ctrl_every: int):
+    """One full transfer: ScanInputs -> (final SimState, TunerState, traces).
+
+    Pure and shape-stable in its pytree argument, hence vmap-able across a
+    batch of scenarios.
+    """
+
+    def core(inp: ScanInputs):
+        sim0 = network_model.init_state(inp.total_mb, inp.net)
+        step = make_step_fn(controller, cpu, inp, dt=dt,
+                            ctrl_every=ctrl_every)
+        xs = (jnp.arange(n_steps, dtype=jnp.int32), inp.bw)
+        (sim, ts), metrics = jax.lax.scan(step, (sim0, inp.state0), xs)
+        return sim, ts, metrics
+
+    return core
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "profile", "cpu", "sla", "n_steps", "dt", "ctrl_every", "scaling",
-    "tuned", "pp_t", "par_t", "files_t", "totals_t", "static_weights"))
-def _simulate_jit(num_ch0, cores0, freq0, *, profile, cpu, sla, n_steps, dt,
-                  ctrl_every, scaling, tuned, pp_t, par_t, files_t, totals_t,
-                  bw_schedule, static_weights=None):
-    pp = jnp.asarray(pp_t, jnp.float32)
-    par = jnp.asarray(par_t, jnp.float32)
-    avg_file = jnp.asarray(files_t, jnp.float32)
-    totals = jnp.asarray(totals_t, jnp.float32)
+@functools.lru_cache(maxsize=None)
+def get_runner(controller_code, cpu: CpuProfile, n_steps: int, dt: float,
+               ctrl_every: int, batched: bool):
+    """Jitted (and optionally vmapped) engine core, cached per code group.
 
-    sim0 = network_model.init_state(totals, profile)
-    ts0 = tuners.init_tuner_state(num_ch0, cores0, freq0)
-
-    step = make_step_fn(profile, cpu, sla, avg_file, pp, par, dt=dt,
-                        ctrl_every=ctrl_every, scaling=scaling, tuned=tuned,
-                        static_weights=static_weights)
-    xs = (jnp.arange(n_steps, dtype=jnp.int32), bw_schedule)
-    (sim, ts), metrics = jax.lax.scan(step, (sim0, ts0), xs)
-    return sim, ts, metrics
+    ``controller_code`` must be a canonical (numerics-stripped, hashable)
+    controller — see ``Controller.code()``.  Scenarios that share a cache key
+    share one compiled executable.
+    """
+    core = build_core(controller_code, cpu, n_steps=n_steps, dt=dt,
+                      ctrl_every=ctrl_every)
+    if batched:
+        core = jax.vmap(core)
+    return jax.jit(core)
 
 
 def simulate(
@@ -150,91 +201,20 @@ def simulate(
     bw_schedule: Optional[np.ndarray] = None,
     name: Optional[str] = None,
 ) -> TransferResult:
-    """Run one transfer to completion (or ``total_s`` timeout).
+    """Deprecated shim over :func:`repro.api.run`.
 
-    ``controller`` is either an ``SLA`` (run the matching paper tuner) or a
-    ``StaticController`` baseline.
+    ``controller`` is anything :func:`repro.api.as_controller` accepts: a
+    Controller, a registry name, an ``SLA`` (run the matching paper tuner),
+    or a legacy ``baselines.StaticController``.  ``sla`` is ignored (kept
+    for signature compatibility).
     """
-    n_steps = int(round(total_s / dt))
-
-    if isinstance(controller, StaticController):
-        params, chunked = controller.params, tuple(specs)
-        sla = sla or SLA()
-        tuned = False
-        scaling_eff = False
-        num_ch0 = float(jnp.sum(params.cc))
-        cores0, freq0 = int(params.cores), int(params.freq_idx)
-        pp_t = tuple(float(x) for x in np.asarray(params.pp))
-        par_t = tuple(float(x) for x in np.asarray(params.par))
-        label = controller.name
-    else:
-        assert isinstance(controller, SLA)
-        sla = controller
-        params, chunked = heuristics.initialize(specs, profile, cpu, sla)
-        tuned = True
-        scaling_eff = scaling
-        num_ch0 = float(jnp.sum(params.cc))
-        if sla.policy == SLAPolicy.ISMAIL_TARGET:
-            # baseline semantics: 1 channel, OS-default CPU, no scaling
-            num_ch0 = 1.0
-            scaling_eff = False
-            cores0, freq0 = cpu.num_cores, len(cpu.freq_levels_ghz) - 1
-        elif scaling:
-            cores0, freq0 = int(params.cores), int(params.freq_idx)
-        else:
-            # Fig. 4 ablation: load-control module removed -> the host runs
-            # at OS defaults (performance governor: all cores, max freq).
-            cores0, freq0 = cpu.num_cores, len(cpu.freq_levels_ghz) - 1
-        pp_t = tuple(float(x) for x in np.asarray(params.pp))
-        par_t = tuple(float(x) for x in np.asarray(params.par))
-        label = {0: "ME", 1: "EEMT", 2: "EETT",
-                 3: "ismail-target"}[int(sla.policy)]
-        if not scaling and sla.policy != SLAPolicy.ISMAIL_TARGET:
-            label += "-noscale"
-
-    files_t = tuple(s.avg_file_mb for s in chunked)
-    totals_t = tuple(s.total_mb for s in chunked)
-    if isinstance(controller, SLA) and \
-            sla.policy == SLAPolicy.ISMAIL_TARGET:
-        tot = sum(totals_t)
-        static_weights = tuple(t / tot for t in totals_t)
-    else:
-        static_weights = None
-    ctrl_every = max(int(round(sla.timeout_s / dt)), 1)
-
-    if bw_schedule is None:
-        bw = jnp.ones((n_steps,), jnp.float32)
-    else:
-        bw = jnp.asarray(bw_schedule, jnp.float32)
-        assert bw.shape == (n_steps,)
-
-    sim, ts, metrics = _simulate_jit(
-        jnp.asarray(num_ch0, jnp.float32), jnp.asarray(cores0, jnp.int32),
-        jnp.asarray(freq0, jnp.int32), profile=profile, cpu=cpu, sla=sla,
-        n_steps=n_steps, dt=dt, ctrl_every=ctrl_every, scaling=scaling_eff,
-        tuned=tuned, pp_t=pp_t, par_t=par_t, files_t=files_t,
-        totals_t=totals_t, bw_schedule=bw, static_weights=static_weights)
-
-    m = jax.tree.map(np.asarray, metrics)
-    done = m.done
-    completed = bool(done[-1])
-    if completed:
-        t_done = float(dt * int(np.argmax(done)))
-    else:
-        t_done = float(total_s)
-    energy = float(sim.energy_j)
-    total_mb = float(sum(totals_t))
-    moved = float(sim.bytes_moved)
-    avg_tput = moved / max(t_done, 1e-9)
-    avg_power = energy / max(t_done, 1e-9)
-
-    return TransferResult(
-        name=name or label,
-        time_s=t_done,
-        energy_j=energy,
-        avg_tput_mbps=avg_tput,
-        avg_tput_gbps=avg_tput * 8.0 / 1000.0,
-        avg_power_w=avg_power,
-        completed=completed,
-        metrics=m,
-    )
+    del sla
+    warnings.warn("repro.core.simulate is deprecated; use repro.api.Scenario "
+                  "with repro.api.run/sweep", DeprecationWarning,
+                  stacklevel=2)
+    from repro import api
+    scenario = api.Scenario(
+        profile=profile, cpu=cpu, datasets=tuple(specs),
+        controller=api.as_controller(controller, scaling=scaling),
+        total_s=total_s, dt=dt, bw_schedule=bw_schedule, name=name)
+    return api.run(scenario)

@@ -55,20 +55,26 @@ def _me_metric(meas: Measurement):
 
 
 def slow_start(ts: TunerState, meas: Measurement, profile: NetworkProfile,
-               sla: SLA) -> TunerState:
+               sla, policy: SLAPolicy = None) -> TunerState:
     """Algorithm 2 — one corrective step after the first timeout.
 
     numCh *= bandwidth / lastThroughput, then hand over to INCREASE with the
     reference metric primed from this first measurement.
+
+    ``sla`` may be a static :class:`SLA` or a traceable
+    :class:`~repro.core.types.SLAParams`; in the latter case ``policy`` must
+    be passed explicitly (it selects code, so it cannot be traced).
     """
+    policy = sla.policy if policy is None else policy
     goal = profile.bandwidth_mbps
-    if sla.policy == SLAPolicy.TARGET_THROUGHPUT and sla.target_tput_mbps > 0:
-        goal = min(goal, sla.target_tput_mbps)
+    if policy == SLAPolicy.TARGET_THROUGHPUT:
+        tgt = sla.target_tput_mbps
+        goal = jnp.where(tgt > 0.0, jnp.minimum(goal, tgt), goal)
     corr = goal / jnp.maximum(meas.avg_tput, 1e-3)
     corr = jnp.clip(corr, 0.25, 8.0)   # don't let a cold window explode numCh
-    num_ch = jnp.clip(ts.num_ch * corr, 1.0, float(sla.max_ch))
+    num_ch = jnp.clip(ts.num_ch * corr, 1.0, sla.max_ch * 1.0)
     ref = jnp.where(
-        jnp.asarray(sla.policy == SLAPolicy.MIN_ENERGY),
+        jnp.asarray(policy == SLAPolicy.MIN_ENERGY),
         _me_metric(meas),
         meas.avg_tput,
     )
@@ -79,7 +85,7 @@ def slow_start(ts: TunerState, meas: Measurement, profile: NetworkProfile,
 def me_update(ts: TunerState, meas: Measurement, sla: SLA) -> TunerState:
     """Algorithm 4 — Minimum energy. Feedback metric: E_last + E_future."""
     m = _me_metric(meas)
-    a, b, d, mx = sla.alpha, sla.beta, float(sla.delta_ch), float(sla.max_ch)
+    a, b, d, mx = sla.alpha, sla.beta, sla.delta_ch * 1.0, sla.max_ch * 1.0
     st, ch, ref = ts.fsm, ts.num_ch, ts.ref
 
     improved = m < (1.0 - a) * ref
@@ -113,7 +119,7 @@ def me_update(ts: TunerState, meas: Measurement, sla: SLA) -> TunerState:
 def eemt_update(ts: TunerState, meas: Measurement, sla: SLA) -> TunerState:
     """Algorithm 5 — Energy-efficient maximum throughput."""
     tput = meas.avg_tput
-    a, b, d, mx = sla.alpha, sla.beta, float(sla.delta_ch), float(sla.max_ch)
+    a, b, d, mx = sla.alpha, sla.beta, sla.delta_ch * 1.0, sla.max_ch * 1.0
     st, ch, ref = ts.fsm, ts.num_ch, ts.ref
 
     better = tput > (1.0 + b) * ref
@@ -147,8 +153,8 @@ def eemt_update(ts: TunerState, meas: Measurement, sla: SLA) -> TunerState:
 def eett_update(ts: TunerState, meas: Measurement, sla: SLA) -> TunerState:
     """Algorithm 6 — Energy-efficient target throughput (3-state FSM)."""
     tput = meas.avg_tput
-    a, b, d = sla.alpha, sla.beta, float(sla.delta_ch)
-    mx, tgt = float(sla.max_ch), sla.target_tput_mbps
+    a, b, d = sla.alpha, sla.beta, sla.delta_ch * 1.0
+    mx, tgt = sla.max_ch * 1.0, sla.target_tput_mbps
     st, ch = ts.fsm, ts.num_ch
 
     high = tput > (1.0 + b) * tgt
@@ -167,7 +173,8 @@ def eett_update(ts: TunerState, meas: Measurement, sla: SLA) -> TunerState:
     new_st = jnp.where(in_inc, st_inc, st_rec)
 
     return ts._replace(fsm=new_st.astype(jnp.int32), num_ch=new_ch,
-                       prev_num_ch=ch, ref=jnp.asarray(tgt, jnp.float32))
+                       prev_num_ch=ch,
+                       ref=jnp.asarray(tgt * 1.0, jnp.float32))
 
 
 def ismail_target_update(ts: TunerState, meas: Measurement,
@@ -182,30 +189,35 @@ def ismail_target_update(ts: TunerState, meas: Measurement,
     high = tput > (1.0 + sla.beta) * tgt
     ch = jnp.where(low, ts.num_ch + 1.0,
                    jnp.where(high, ts.num_ch - 1.0, ts.num_ch))
-    ch = jnp.clip(ch, 1.0, float(sla.max_ch))
+    ch = jnp.clip(ch, 1.0, sla.max_ch * 1.0)
     return ts._replace(num_ch=ch, prev_num_ch=ts.num_ch,
                        fsm=jnp.asarray(fsm.INCREASE, jnp.int32))
 
 
 def update(ts: TunerState, meas: Measurement, profile: NetworkProfile,
-           cpu: CpuProfile, sla: SLA, *, scaling: bool = True) -> TunerState:
+           cpu: CpuProfile, sla, *, scaling: bool = True,
+           policy: SLAPolicy = None) -> TunerState:
     """One controller tick: Slow Start / SLA tuner + Algorithm-3 load control.
 
     ``scaling=False`` disables frequency & core scaling (the Fig. 4 ablation).
+    ``sla`` is a static :class:`SLA` or a traceable
+    :class:`~repro.core.types.SLAParams` (then pass ``policy`` explicitly —
+    it selects code paths and stays static under ``jit``/``vmap``).
     """
+    policy = sla.policy if policy is None else policy
     in_ss = ts.fsm == fsm.SLOW_START
 
-    if sla.policy == SLAPolicy.ISMAIL_TARGET:
+    if policy == SLAPolicy.ISMAIL_TARGET:
         # no slow-start correction: the baseline ramps from 1 channel
         ss = ts._replace(fsm=jnp.asarray(fsm.INCREASE, jnp.int32))
         tuned = ismail_target_update(ts, meas, sla)
         return TunerState(*[jnp.where(in_ss, s, t)
                             for s, t in zip(ss, tuned)])
 
-    ss = slow_start(ts, meas, profile, sla)
-    if sla.policy == SLAPolicy.MIN_ENERGY:
+    ss = slow_start(ts, meas, profile, sla, policy)
+    if policy == SLAPolicy.MIN_ENERGY:
         tuned = me_update(ts, meas, sla)
-    elif sla.policy == SLAPolicy.MAX_THROUGHPUT:
+    elif policy == SLAPolicy.MAX_THROUGHPUT:
         tuned = eemt_update(ts, meas, sla)
     else:
         tuned = eett_update(ts, meas, sla)

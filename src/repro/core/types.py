@@ -117,6 +117,55 @@ DIDCLAB = NetworkProfile("didclab", 125.0, 0.044, avg_window_mb=1.0, buffer_mb=2
 TESTBEDS = {"chameleon": CHAMELEON, "cloudlab": CLOUDLAB, "didclab": DIDCLAB}
 
 
+class NetParams(NamedTuple):
+    """Numeric (traceable) view of a :class:`NetworkProfile`.
+
+    Same attribute names as the profile, but every field is a scalar array so
+    whole testbed grids can be ``vmap``-ed in one compiled executable.  All
+    simulator code is duck-typed over either form.
+    """
+
+    bandwidth_mbps: jnp.ndarray
+    rtt_s: jnp.ndarray
+    avg_window_mb: jnp.ndarray
+    buffer_mb: jnp.ndarray
+    loss_knee: jnp.ndarray
+    cross_traffic: jnp.ndarray
+
+    @property
+    def bdp_mb(self):
+        return self.bandwidth_mbps * self.rtt_s
+
+    @classmethod
+    def from_profile(cls, profile: "NetworkProfile") -> "NetParams":
+        # Host-side scalars: these cross to the device inside the jitted
+        # engine runner, so allocating device arrays here would only add a
+        # round-trip per leaf during scenario prep.
+        return cls(*[np.float32(getattr(profile, f)) for f in cls._fields])
+
+
+class SLAParams(NamedTuple):
+    """Numeric (traceable) view of an :class:`SLA`.
+
+    Mirrors the SLA attribute names used inside the controller tick so tuner
+    hyper-parameters (and the EETT target) can vary across a vmap batch.
+    ``policy`` and ``timeout_s`` stay static: the former selects code, the
+    latter sets the host-side controller-tick stride.
+    """
+
+    target_tput_mbps: jnp.ndarray
+    alpha: jnp.ndarray
+    beta: jnp.ndarray
+    delta_ch: jnp.ndarray
+    max_ch: jnp.ndarray
+    max_load: jnp.ndarray
+    min_load: jnp.ndarray
+
+    @classmethod
+    def from_sla(cls, sla: "SLA") -> "SLAParams":
+        return cls(*[np.float32(getattr(sla, f)) for f in cls._fields])
+
+
 class TransferParams(NamedTuple):
     """The five jointly-tuned application-level parameters (paper §II).
 

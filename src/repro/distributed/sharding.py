@@ -25,6 +25,46 @@ import re
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def set_mesh(mesh: Mesh):
+    """Version-compatible ambient-mesh context manager.
+
+    jax >= 0.5 exposes ``jax.set_mesh``; on older versions (0.4.x) the
+    ``Mesh`` object itself is the context manager that installs the ambient
+    mesh for ``with_sharding_constraint`` / ``shard_map``.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """Version-compatible ``jax.shard_map``.
+
+    On jax 0.4.x the implementation lives in ``jax.experimental.shard_map``
+    and the replication-check kwarg is ``check_rep`` (not ``check_vma``).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def get_abstract_mesh():
+    """Version-compatible ``jax.sharding.get_abstract_mesh``.
+
+    Falls back to the thread-resource physical mesh on jax 0.4.x, which
+    supports the same ``.empty`` / ``.shape`` / ``.axis_names`` queries the
+    callers use.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax.interpreters import pxla
+    return pxla.thread_resources.env.physical_mesh
+
 # (regex on '/'-joined path, spec WITHOUT the stacked-layer axis)
 _RULES = (
     (r"embed$",                      P("model", None)),

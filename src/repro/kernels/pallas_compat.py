@@ -1,0 +1,12 @@
+"""Version-compat aliases for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; depending
+on the installed jax only one of the two exists.  Kernels import the alias
+from here so they run on either version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams

@@ -95,8 +95,7 @@ def train(bundle: ModelBundle, opt_cfg: AdamWConfig, data: Iterator[dict],
             hooks(i, state, metrics)
 
     if ckpt:
-        ckpt.maybe_save(tcfg.total_steps, state)
-        ckpt.wait()
+        ckpt.final_save(tcfg.total_steps, state)
 
     report = TrainReport(
         steps_run=tcfg.total_steps - start_step,

@@ -1,5 +1,8 @@
 """Property tests (hypothesis) for the host power model and Algorithm 3."""
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import energy_model as em

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the transfer engine's invariants."""
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (SLA, SLAPolicy, CpuProfile, DatasetSpec,
@@ -54,31 +57,3 @@ def test_eett_never_wildly_overshoots(frac):
                  SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
                      target_tput_mbps=tgt, max_ch=64), total_s=2400)
     assert r.avg_tput_mbps <= tgt * 1.5 + 100.0
-
-
-def test_vmap_parameter_sweep():
-    """The engine vectorizes: vmap over initial channel counts."""
-    from repro.core import CHAMELEON, MIXED, engine, heuristics, \
-        network_model, tuners
-    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
-    params, chunked = heuristics.initialize(MIXED, CHAMELEON, CPU, sla)
-    files = jnp.asarray([s.avg_file_mb for s in chunked])
-    totals = jnp.asarray([s.total_mb for s in chunked])
-    step = engine.make_step_fn(CHAMELEON, CPU, sla, files, params.pp,
-                               params.par, dt=0.1, ctrl_every=10,
-                               scaling=True, tuned=True)
-
-    def one(num_ch0):
-        sim0 = network_model.init_state(totals, CHAMELEON)
-        ts0 = tuners.init_tuner_state(num_ch0, 2, 1)
-        xs = (jnp.arange(600, dtype=jnp.int32), jnp.ones((600,), jnp.float32))
-        (sim, _), _ = jax.lax.scan(step, (sim0, ts0), xs)
-        return sim.bytes_moved
-
-    moved = jax.jit(jax.vmap(one))(jnp.asarray([1.0, 8.0, 32.0]))
-    assert moved.shape == (3,)
-    assert bool((moved > 0).all())
-    # Over-concurrency (paper §II): starting at 32 channels triggers the
-    # contention knee and moves LESS data in the first minute than a
-    # well-sized start — the FSM needs time to shed channels.
-    assert float(moved[2]) < float(moved[1])

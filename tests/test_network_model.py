@@ -1,5 +1,8 @@
 """Property tests for the transfer-channel simulator + Algorithm 1."""
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import heuristics, network_model as nm

@@ -39,7 +39,7 @@ def run(rows=None):
 
     results = {}
     for (tb, frac, name, tgt), r in zip(cells, swept):
-        err = abs(r.avg_tput_mbps - tgt) / tgt
+        err = abs(r.avg_tput_MBps - tgt) / tgt
         tag = f"fig3/{tb}/{int(frac * 100)}pct/{name}"
         emit(tag, secs,
              f"{r.avg_tput_gbps:.3f}Gbps;target_err={err:.2f};"

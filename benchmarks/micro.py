@@ -20,18 +20,32 @@ CPU = CpuProfile()
 
 
 def bench_engine(rows=None):
-    """One full simulated transfer (jit warm) — engine steps/second."""
-    sc = api.Scenario(profile=CHAMELEON, datasets=MIXED,
-                      controller=api.make_controller("eemt", max_ch=64),
-                      cpu=CPU, total_s=600.0)
-    api.run(sc)                                               # warm
+    """One full simulated transfer (jit warm) — engine steps/second.
+
+    Uses the full-horizon reference runner (``early_exit=False``) so the
+    step count in the steps/s metric is the step count actually executed;
+    the default early-exit runner stops ~1 chunk past completion and would
+    inflate the number.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import engine
+
+    n_steps = 6000
+    ctrl = api.make_controller("eemt", max_ch=64)
+    ci = ctrl.init(MIXED, CHAMELEON, CPU)
+    inp = jax.tree.map(np.asarray,
+                       engine.ScanInputs.from_init(ci, CHAMELEON, n_steps))
+    runner = engine.get_runner(ctrl.code(), CPU, n_steps, 0.1, 10,
+                               batched=False, early_exit=False)
+    jax.block_until_ready(runner(inp))                        # warm
     t0 = time.perf_counter()
     n = 3
     for _ in range(n):
-        api.run(sc)
+        jax.block_until_ready(runner(inp))
     dt = (time.perf_counter() - t0) / n
-    steps = 6000
-    emit("micro/engine_transfer", dt, f"{steps / dt:.0f}steps_per_s")
+    emit("micro/engine_transfer", dt, f"{n_steps / dt:.0f}steps_per_s")
 
 
 def bench_vmap_sweep(rows=None):
@@ -44,8 +58,10 @@ def bench_vmap_sweep(rows=None):
     ctrl = api.make_controller("eemt", max_ch=64)
     ci = ctrl.init(MIXED, CHAMELEON, CPU)
     base = engine.ScanInputs.from_init(ci, CHAMELEON, n_steps)
+    # Full-horizon reference: every lane really executes n_steps ticks, so
+    # the sim_steps_per_s metric divides by the work actually done.
     core = engine.build_core(ctrl.code(), CPU, n_steps=n_steps, dt=0.1,
-                             ctrl_every=10)
+                             ctrl_every=10, early_exit=False)
 
     def one(num_ch0):
         ts0 = base.state0._replace(num_ch=num_ch0, prev_num_ch=num_ch0)

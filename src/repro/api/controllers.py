@@ -20,6 +20,14 @@ returns a numerics-stripped canonical instance — two controllers with equal
 ``code()`` compile to the same executable, which is what lets
 :func:`repro.api.sweep` batch a whole grid of them into one ``vmap``.
 
+Controllers never see post-completion ticks: the engine's completion
+masking (see ``repro.core.engine``) gates ``tick`` on the transfer still
+being live and freezes the tuner state afterwards, and the chunked
+early-exit loop stops scanning shortly after every lane of a batch drains.
+``channels`` must tolerate drained partitions (zero remaining bytes) — all
+built-in implementations hand them zero channels, which also makes the
+zero-byte padding partitions ``sweep`` adds for batching a no-op.
+
 The string registry replaces the old ``BASELINE_BUILDERS`` dict + ad-hoc SLA
 construction::
 

@@ -3,8 +3,17 @@
 ``sweep`` is the headline: it groups scenarios whose compiled code is
 identical (same controller code path, CPU model, step count, tick stride and
 partition count), stacks each group's numeric inputs, and executes the group
-as ONE ``jax.vmap``-over-``lax.scan`` XLA launch.  A 72-cell figure grid
-becomes a handful of compiled executables instead of 72 sequential jit calls.
+as ONE vmapped XLA launch of the early-exiting engine.  A 72-cell figure
+grid becomes a handful of compiled executables instead of 72 sequential jit
+calls — and each executable stops scanning as soon as every lane of its
+batch has drained, instead of burning the full padded ``total_s`` horizon.
+
+On hosts with more than one accelerator device, groups are additionally
+sharded across devices: the stacked batch is padded to a multiple of the
+device count (:func:`repro.distributed.sharding.pad_batch`), placed with a
+``batch``-sharded layout, and run through a ``shard_map``-wrapped runner
+whose input buffers are donated.  Each device early-exits on its own shard
+independently.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from repro.core.types import CpuProfile, NetworkProfile
 from .controllers import Controller, as_controller
 
 
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class Scenario:
     """Everything one transfer experiment needs, bundled and frozen.
@@ -29,6 +39,11 @@ class Scenario:
     ``controller`` accepts anything :func:`as_controller` does — a Controller
     instance, a registry name ("eemt", "wget/curl", ...), or a legacy SLA /
     StaticController object.
+
+    ``total_s`` is a *budget*, not a cost: the engine freezes all accounting
+    at the completion tick and stops simulating shortly after (chunked early
+    exit), so ``energy_j`` / ``time_s`` / ``avg_power_w`` of a completed
+    transfer are invariant to how generous the horizon was.
 
     ``eq=False``: scenarios may carry an ndarray ``bw_schedule``, so equality
     and hashing are by identity (array fields would make ``==`` ambiguous).
@@ -96,10 +111,15 @@ def _prepare(sc: Scenario) -> _Prepared:
 
 def _postprocess(sim, metrics, prep: _Prepared) -> TransferResult:
     m = jax.tree.map(np.asarray, metrics)
-    done = m.done
-    completed = bool(done[-1])
+    sim = jax.tree.map(np.asarray, sim)
+    # Completion comes from the final state, not the trace: the early-exit
+    # runner leaves never-executed tail ticks at their done=True buffer init.
+    completed = bool(np.sum(sim.remaining_mb) <= 0.0)
     if completed:
-        t_done = float(prep.dt * int(np.argmax(done)))
+        # ``done[i]`` is recorded post-step: the transfer drained DURING tick
+        # i, i.e. at time (i + 1) * dt.  (A transfer finishing on tick 0 took
+        # one dt, not zero seconds.)
+        t_done = float(prep.dt * (int(np.argmax(m.done)) + 1))
     else:
         t_done = float(prep.total_s)
     energy = float(sim.energy_j)
@@ -110,12 +130,49 @@ def _postprocess(sim, metrics, prep: _Prepared) -> TransferResult:
         name=prep.name,
         time_s=t_done,
         energy_j=energy,
-        avg_tput_mbps=avg_tput,
+        avg_tput_MBps=avg_tput,
         avg_tput_gbps=avg_tput * 8.0 / 1000.0,
         avg_power_w=avg_power,
         completed=completed,
         metrics=m,
     )
+
+
+# ScanInputs leaves with a leading partition axis (everything else in the
+# pytree is scalar per scenario).
+_PARTITION_FIELDS = ("pp", "par", "total_mb", "avg_file_mb", "static_w")
+
+
+def _pad_partitions(prep: _Prepared, n_partitions: int) -> _Prepared:
+    """Widen a prepared scenario to ``n_partitions`` with zero-byte partitions.
+
+    A zero-byte partition is born drained: it gets no channels, contributes
+    zero demand/bytes/energy, and the contention estimate averages over
+    active partitions only — so padding is a bit-exact no-op on the results.
+    ``sweep`` uses it to merge scenarios with different dataset counts into
+    one compiled executable.
+    """
+    p = prep.key.n_partitions
+    if p == n_partitions:
+        return prep
+    pad = n_partitions - p
+    inputs = prep.inputs._replace(**{
+        f: np.concatenate([np.asarray(getattr(prep.inputs, f)),
+                           np.zeros(pad, np.float32)])
+        for f in _PARTITION_FIELDS})
+    return prep._replace(key=prep.key._replace(n_partitions=n_partitions),
+                         inputs=inputs)
+
+
+def _merged_partition_counts(keys) -> dict:
+    """The padding policy shared by ``sweep`` and ``group_count``: each key
+    is widened to the maximum partition count among the keys it could share
+    an executable with (same key modulo partition count)."""
+    p_max: dict[_GroupKey, int] = {}
+    for k in keys:
+        base = k._replace(n_partitions=0)
+        p_max[base] = max(p_max.get(base, 0), k.n_partitions)
+    return {k: p_max[k._replace(n_partitions=0)] for k in keys}
 
 
 def _run_prepared(prep: _Prepared) -> TransferResult:
@@ -132,15 +189,57 @@ def run(scenario: Scenario) -> TransferResult:
     return _run_prepared(_prepare(scenario))
 
 
-def sweep(scenarios: Sequence[Scenario]) -> list[TransferResult]:
+def _run_group(key: _GroupKey, stacked, batch: int, devices):
+    """Execute one stacked group, sharding across devices when possible.
+
+    Returns (sim, metrics) pytrees with numpy leaves and a leading batch
+    axis of exactly ``batch`` (device padding stripped).
+    """
+    # Shard only when every device gets at least one real lane: smaller
+    # groups would pay padding lanes plus an extra compiled executable for
+    # no wall-clock win over the plain vmapped runner.
+    if devices is not None and len(devices) > 1 and batch >= len(devices):
+        from repro.distributed import sharding as shd
+        stacked, _ = shd.pad_batch(stacked, len(devices))
+        mesh = shd.batch_mesh(devices)
+        runner = engine.get_sharded_runner(
+            key.ctrl_code, key.cpu, key.n_steps, key.dt, key.ctrl_every,
+            tuple(devices))
+        sim, _, metrics = runner(shd.shard_batch(stacked, mesh))
+    else:
+        runner = engine.get_runner(key.ctrl_code, key.cpu, key.n_steps,
+                                   key.dt, key.ctrl_every, batched=True)
+        sim, _, metrics = runner(stacked)
+    sim = jax.tree.map(lambda x: np.asarray(x)[:batch], sim)
+    metrics = jax.tree.map(lambda x: np.asarray(x)[:batch], metrics)
+    return sim, metrics
+
+
+def sweep(scenarios: Sequence[Scenario], *,
+          devices: Optional[Sequence] = None) -> list[TransferResult]:
     """Run many scenarios, batching shape-compatible ones into one launch.
 
     Results come back in input order.  Scenarios group when their compiled
-    code is identical; each group of size > 1 executes as one
-    ``vmap(scan)`` call, singletons fall back to the unbatched runner (which
-    shares the per-group cache with :func:`run`).
+    code is identical; each group of size > 1 executes as one vmapped call
+    of the early-exiting engine, singletons fall back to the unbatched
+    runner (which shares the per-group cache with :func:`run`).
+
+    ``devices`` selects the devices groups shard across (default: all local
+    devices).  With more than one device, each group batch is padded to a
+    multiple of the device count and dispatched through a ``shard_map``
+    runner with donated input buffers; on a single device the plain vmapped
+    runner is used and results are identical.
     """
+    if devices is None:
+        devices = jax.devices()
     prepared = [_prepare(sc) for sc in scenarios]
+    # Merge across dataset counts: pad each scenario to the widest partition
+    # axis among the scenarios it could share an executable with.  A few
+    # dead zero-byte lanes collapse the executable count, and compile time
+    # dominates a cold sweep; scenarios whose groups can never merge are
+    # left unpadded.
+    merged = _merged_partition_counts([p.key for p in prepared])
+    prepared = [_pad_partitions(p, merged[p.key]) for p in prepared]
     groups: dict[_GroupKey, list[int]] = defaultdict(list)
     for i, prep in enumerate(prepared):
         groups[prep.key].append(i)
@@ -150,13 +249,9 @@ def sweep(scenarios: Sequence[Scenario]) -> list[TransferResult]:
         if len(idxs) == 1:
             results[idxs[0]] = _run_prepared(prepared[idxs[0]])
             continue
-        runner = engine.get_runner(key.ctrl_code, key.cpu, key.n_steps,
-                                   key.dt, key.ctrl_every, batched=True)
         stacked = jax.tree.map(lambda *xs: np.stack(xs),
                                *[prepared[i].inputs for i in idxs])
-        sim, _, metrics = runner(stacked)
-        sim_np = jax.tree.map(np.asarray, sim)
-        metrics_np = jax.tree.map(np.asarray, metrics)
+        sim_np, metrics_np = _run_group(key, stacked, len(idxs), devices)
         for b, i in enumerate(idxs):
             results[i] = _postprocess(
                 jax.tree.map(lambda x: x[b], sim_np),
@@ -172,7 +267,11 @@ def group_count(scenarios: Sequence[Scenario]) -> int:
     construction — so it is cheap to call before a sweep.  Assumes the
     controller preserves the partition count (all built-in controllers do;
     Algorithm-1 chunking splits files *within* partitions, never partitions).
+    Mirrors ``sweep``'s partition padding: scenarios are counted at the
+    maximum partition count among the scenarios they could share an
+    executable with (same key modulo partition count).
     """
-    return len({_group_key(as_controller(sc.controller), sc,
-                           len(sc.datasets))
-                for sc in scenarios})
+    keys = [_group_key(as_controller(sc.controller), sc, len(sc.datasets))
+            for sc in scenarios]
+    merged = _merged_partition_counts(keys)
+    return len({k._replace(n_partitions=merged[k]) for k in keys})

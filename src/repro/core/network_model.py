@@ -71,7 +71,11 @@ def step(
     cc = jnp.maximum(params.cc, 0.0) * active
     total_ch = jnp.sum(cc)
 
-    avg_win = jnp.mean(state.window_mb)
+    # Contention sees only the partitions that still hold channels: drained
+    # partitions' windows keep ramping toward the profile window and would
+    # otherwise skew the saturation estimate late in the transfer.
+    n_active = jnp.maximum(jnp.sum(active), 1.0)
+    avg_win = jnp.sum(state.window_mb * active) / n_active
     r1 = channel_rate(profile, state.window_mb, avg_file_mb, params.pp, params.par)
     demand = cc * r1                                            # [P]
     total_demand = jnp.sum(demand)

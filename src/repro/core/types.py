@@ -181,12 +181,18 @@ class TransferParams(NamedTuple):
 
 
 class SimState(NamedTuple):
-    """Dynamic state of the discrete-time transfer simulation."""
+    """Dynamic state of the discrete-time transfer simulation.
+
+    The engine freezes the whole state at the completion tick (see
+    ``repro.core.engine``): after the last partition drains, ``t`` stops
+    advancing and ``energy_j`` stops accumulating, so the final state
+    describes the *transfer*, not the padded simulation horizon.
+    """
 
     remaining_mb: jnp.ndarray   # [P] bytes left per partition
     window_mb: jnp.ndarray      # [P] current avg TCP window per channel
-    t: jnp.ndarray              # [] elapsed seconds
-    energy_j: jnp.ndarray       # [] cumulative energy
+    t: jnp.ndarray              # [] elapsed seconds (frozen at completion)
+    energy_j: jnp.ndarray       # [] cumulative energy (frozen at completion)
     bytes_moved: jnp.ndarray    # [] cumulative MB
 
 
@@ -206,7 +212,13 @@ class TunerState(NamedTuple):
 
 
 class TickMetrics(NamedTuple):
-    """Per-step observables emitted by the engine scan."""
+    """Per-step observables emitted by the engine scan.
+
+    ``done[i]`` is recorded *after* step ``i``: it is True from the tick
+    during which the transfer drained (completion time ``(i + 1) * dt``).
+    All other fields are masked to zero on post-completion ticks, so traces
+    from the early-exit and full-horizon engine paths are bit-identical.
+    """
 
     tput_mbps: jnp.ndarray
     power_w: jnp.ndarray

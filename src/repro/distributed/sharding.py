@@ -1,4 +1,13 @@
-"""Partition rules: map every parameter path to a PartitionSpec.
+"""Partition rules + batch-sharding helpers.
+
+Two jobs live here:
+
+1. Parameter partitioning for the model stack: map every parameter path to a
+   PartitionSpec (the bulk of this module).
+2. Scenario-batch sharding for the transfer engine: a 1-D ``batch`` mesh over
+   the local devices plus pad/place helpers, used by ``repro.api.sweep`` to
+   run one vmapped engine group as per-device shards (see
+   ``repro.core.engine.get_sharded_runner``).
 
 Mesh axes:
     single pod:  (data=16, model=16)
@@ -23,6 +32,7 @@ from __future__ import annotations
 import re
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -51,6 +61,43 @@ def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
     if "check_vma" in kwargs:
         kwargs["check_rep"] = kwargs.pop("check_vma")
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def batch_mesh(devices=None) -> Mesh:
+    """1-D mesh with a single ``batch`` axis over ``devices``.
+
+    ``devices`` defaults to all local devices; pass an explicit tuple to pin
+    a sweep to a subset (the tuple also serves as the runner cache key — see
+    ``repro.core.engine.get_sharded_runner``).
+    """
+    devices = tuple(jax.devices() if devices is None else devices)
+    return Mesh(np.asarray(devices), ("batch",))
+
+
+def pad_batch(tree, multiple: int):
+    """Pad axis 0 of every leaf up to a multiple of ``multiple`` by repeating
+    the last row.  Returns ``(padded_tree, original_batch_size)``; callers
+    slice results back to the original size.  Repeating a real row (instead
+    of zero-fill) keeps the padding lanes numerically well-behaved — they
+    simulate a duplicate scenario and are dropped on the way out.
+    """
+    sizes = {np.shape(leaf)[0] for leaf in jax.tree.leaves(tree)}
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent batch sizes in pytree: {sizes}")
+    b = sizes.pop()
+    pad = (-b) % multiple
+    if pad == 0:
+        return tree, b
+    return jax.tree.map(
+        lambda x: np.concatenate([x, np.repeat(x[-1:], pad, axis=0)]),
+        tree), b
+
+
+def shard_batch(tree, mesh: Mesh):
+    """Place a stacked (batch-leading) pytree on ``mesh`` sharded along
+    ``batch``.  Axis 0 of every leaf must divide the mesh size — pad with
+    :func:`pad_batch` first."""
+    return jax.device_put(tree, NamedSharding(mesh, P("batch")))
 
 
 def get_abstract_mesh():

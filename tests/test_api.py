@@ -103,6 +103,16 @@ def test_noscale_naming():
     assert api.make_controller("eemt").name == "EEMT"
 
 
+def test_avg_tput_mbps_alias_is_deprecated():
+    r = api.run(api.Scenario(profile=CHAMELEON, datasets=FAST,
+                             controller="wget/curl", total_s=TOTAL_S))
+    with pytest.deprecated_call():
+        legacy = r.avg_tput_mbps
+    assert legacy == r.avg_tput_MBps           # same MB/s value
+    np.testing.assert_allclose(r.avg_tput_gbps,
+                               r.avg_tput_MBps * 8.0 / 1000.0)
+
+
 # --------------------------------------------------------- run vs sweep ---
 
 def _grid():
@@ -130,8 +140,8 @@ def test_sweep_matches_run():
         np.testing.assert_allclose(batched.time_s, single.time_s, rtol=1e-5)
         np.testing.assert_allclose(batched.energy_j, single.energy_j,
                                    rtol=1e-4)
-        np.testing.assert_allclose(batched.avg_tput_mbps,
-                                   single.avg_tput_mbps, rtol=1e-4)
+        np.testing.assert_allclose(batched.avg_tput_MBps,
+                                   single.avg_tput_MBps, rtol=1e-4)
 
 
 def test_sweep_batches_shape_compatible_scenarios():
@@ -139,6 +149,28 @@ def test_sweep_batches_shape_compatible_scenarios():
     # 12 cells, but controller code paths: static x1, me, eemt, eett -> 4
     assert api.group_count(scenarios) < len(scenarios)
     assert api.group_count(scenarios) == 4
+
+
+def test_sweep_pads_partition_counts_into_one_group():
+    """Scenarios with different dataset counts share one executable: sweep
+    pads the partition axis with zero-byte partitions, which are bit-exact
+    no-ops on the results."""
+    one = (FAST[0],)
+    scenarios = [
+        api.Scenario(profile=CHAMELEON, datasets=FAST, controller="eemt",
+                     cpu=CPU, total_s=TOTAL_S),
+        api.Scenario(profile=CHAMELEON, datasets=one, controller="eemt",
+                     cpu=CPU, total_s=TOTAL_S),
+        api.Scenario(profile=CLOUDLAB, datasets=one, controller="eemt",
+                     cpu=CPU, total_s=TOTAL_S),
+    ]
+    assert api.group_count(scenarios) == 1
+    swept = api.sweep(scenarios)
+    for sc, batched in zip(scenarios, swept):
+        single = api.run(sc)                   # unbatched, unpadded
+        assert single.completed == batched.completed
+        assert single.time_s == batched.time_s
+        assert single.energy_j == batched.energy_j
 
 
 def test_sweep_preserves_order_and_names():
@@ -167,7 +199,7 @@ def _assert_same_result(a, b):
     assert a.completed == b.completed
     np.testing.assert_allclose(a.time_s, b.time_s, rtol=1e-6)
     np.testing.assert_allclose(a.energy_j, b.energy_j, rtol=1e-5)
-    np.testing.assert_allclose(a.avg_tput_mbps, b.avg_tput_mbps, rtol=1e-5)
+    np.testing.assert_allclose(a.avg_tput_MBps, b.avg_tput_MBps, rtol=1e-5)
     np.testing.assert_allclose(a.avg_power_w, b.avg_power_w, rtol=1e-5)
 
 

@@ -1,0 +1,94 @@
+"""Device-sharded sweeps: correctness on a forced multi-device host.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set before
+jax initializes, so the multi-device assertions run in a subprocess with a
+fresh interpreter; the in-process tests cover the helpers and the
+single-device fallback.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.distributed import sharding as shd
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+# Overwrite (not append): the parent pytest process may carry its own
+# --xla_force_host_platform_device_count from unrelated tests, and the
+# rightmost repeated flag wins.
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax
+assert jax.device_count() == 4, jax.devices()
+
+import numpy as np
+from repro import api
+from repro.core.types import CHAMELEON, DatasetSpec
+
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+# 6 lanes in one group -> padded to 8 across 4 devices.
+scenarios = [api.Scenario(profile=CHAMELEON, datasets=FAST,
+                          controller=api.make_controller("eemt", max_ch=mc),
+                          total_s=60.0, dt=0.25)
+             for mc in (4, 8, 16, 32, 64, 48)]
+assert api.group_count(scenarios) == 1
+swept = api.sweep(scenarios)
+assert len(swept) == len(scenarios)
+for sc, batched in zip(scenarios, swept):
+    single = api.run(sc)             # unbatched, single-device path
+    assert single.completed == batched.completed
+    assert single.time_s == batched.time_s, (single.time_s, batched.time_s)
+    assert single.energy_j == batched.energy_j
+    assert batched.metrics.tput_mbps.shape == single.metrics.tput_mbps.shape
+print("SHARDED-SWEEP-OK")
+"""
+
+
+def test_pad_batch_pads_by_repeating_last_row():
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(3, 2),
+            "b": np.asarray([1.0, 2.0, 3.0], np.float32)}
+    padded, b = shd.pad_batch(tree, 4)
+    assert b == 3
+    assert padded["a"].shape == (4, 2) and padded["b"].shape == (4,)
+    np.testing.assert_array_equal(padded["a"][3], padded["a"][2])
+    # already aligned -> unchanged object contents
+    same, b2 = shd.pad_batch(tree, 3)
+    assert b2 == 3
+    np.testing.assert_array_equal(same["a"], tree["a"])
+
+
+def test_pad_batch_rejects_ragged_pytrees():
+    with pytest.raises(ValueError):
+        shd.pad_batch({"a": np.zeros((3, 2)), "b": np.zeros((2,))}, 4)
+
+
+def test_batch_mesh_defaults_to_local_devices():
+    mesh = shd.batch_mesh()
+    assert mesh.axis_names == ("batch",)
+    assert mesh.shape["batch"] == jax.device_count()
+
+
+def test_shard_batch_places_on_mesh():
+    mesh = shd.batch_mesh()
+    d = mesh.shape["batch"]
+    tree = {"x": np.zeros((2 * d, 3), np.float32)}
+    placed = shd.shard_batch(tree, mesh)
+    assert placed["x"].shape == (2 * d, 3)
+    np.testing.assert_array_equal(np.asarray(placed["x"]), tree["x"])
+
+
+def test_sweep_on_forced_multi_device_host():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "SHARDED-SWEEP-OK" in proc.stdout

@@ -68,8 +68,8 @@ def test_eett_tracks_targets():
                      SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
                          target_tput_mbps=tgt, max_ch=64), total_s=2400)
         assert r.completed
-        assert abs(r.avg_tput_mbps - tgt) / tgt < 0.20, \
-            f"target {tgt}: got {r.avg_tput_mbps}"
+        assert abs(r.avg_tput_MBps - tgt) / tgt < 0.20, \
+            f"target {tgt}: got {r.avg_tput_MBps}"
 
 
 def test_eett_uses_less_power_than_max_throughput_baseline():

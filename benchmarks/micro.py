@@ -93,7 +93,9 @@ def bench_kernels(rows=None):
         return flash_attention(q, k, v, interpret=True)
 
     run_fa()
-    t0 = time.perf_counter(); run_fa(); dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_fa()
+    dt = time.perf_counter() - t0
     flops = 2 * 2 * B * H * T * T * hd * 0.5
     emit("micro/flash_attention_512", dt, f"{flops / dt / 1e9:.2f}GFLOPs_interp")
 
@@ -103,13 +105,15 @@ def bench_kernels(rows=None):
     kk = jax.random.normal(ks[1], (B, 128, H, hd)) * 0.4
     vv = jax.random.normal(ks[2], (B, 128, H, hd)) * 0.4
     wkv(r, kk, vv, w, u, interpret=True)
-    t0 = time.perf_counter(); wkv(r, kk, vv, w, u, interpret=True)
+    t0 = time.perf_counter()
+    wkv(r, kk, vv, w, u, interpret=True)
     emit("micro/wkv_128", time.perf_counter() - t0, "interp")
 
     a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 128, 512))) * 0.4 + 0.5
     b = jax.random.normal(ks[1], (2, 128, 512)) * 0.1
     rglru(a, b, interpret=True)
-    t0 = time.perf_counter(); rglru(a, b, interpret=True)
+    t0 = time.perf_counter()
+    rglru(a, b, interpret=True)
     emit("micro/rglru_128", time.perf_counter() - t0, "interp")
 
 

@@ -1,30 +1,59 @@
 """Benchmark harness entry point: one module per paper figure/table.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,fig4,micro,roofline]
+    PYTHONPATH=src python -m benchmarks.run \
+        [--only fig2,fig3,fig4,micro,roofline,fleet] [--smoke] \
+        [--json BENCH_perf.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark cell) and a
 summary of the paper's headline claims at the end.
+
+``--json`` additionally writes a BENCH perf record — the wall-clock metrics
+the CI perf-regression gate tracks (see benchmarks/compare.py and the
+committed baseline in benchmarks/baselines/).  ``--smoke`` shrinks fig2 and
+fleet to their CI-sized grids so the record is comparable across runs of
+the gate.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import platform
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig2,fig3,fig4,micro,roofline")
+    ap.add_argument("--only", default="fig2,fig3,fig4,micro,roofline,fleet")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grids for fig2/fleet")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH perf record (wall-clock metrics)")
     args = ap.parse_args()
     only = set(args.only.split(","))
 
     print("name,us_per_call,derived")
     summary = {}
+    bench = {}
 
     if "fig2" in only:
         from . import fig2
-        res = fig2.run()
-        summary["fig2_headline"] = fig2.headline(res)
+        prefix = "fig2_smoke" if args.smoke else "fig2"
+        t0 = time.perf_counter()
+        res = fig2.run(smoke=args.smoke)
+        bench[f"{prefix}_wall_s"] = time.perf_counter() - t0
+        if args.json is not None:
+            # Warm passes: runners are cached, so these time simulation
+            # (not XLA compile) — the stable metric the perf gate compares;
+            # best-of-3 because scheduler noise only ever adds time.
+            walls = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fig2.run(smoke=args.smoke)
+                walls.append(time.perf_counter() - t0)
+            bench[f"{prefix}_warm_wall_s"] = min(walls)
+        if not args.smoke:
+            summary["fig2_headline"] = fig2.headline(res)
 
     if "fig3" in only:
         from . import fig3
@@ -42,6 +71,35 @@ def main() -> None:
     if "roofline" in only:
         from . import roofline
         roofline.run()
+
+    if "fleet" in only:
+        from . import fleet as fleet_bench
+        warm = args.json is not None
+        frec = fleet_bench.run(smoke=args.smoke, warm=warm)
+        prefix = "fleet_smoke" if args.smoke else "fleet"
+        if warm:
+            bench[f"{prefix}_warm_wall_s"] = frec["wall_s"]
+            bench[f"{prefix}_cold_wall_s"] = frec["cold_wall_s"]
+        else:
+            bench[f"{prefix}_wall_s"] = frec["wall_s"]
+        bench[f"{prefix}_transfers_per_sec"] = frec["transfers_per_sec"]
+        summary["fleet"] = {k: frec[k] for k in
+                            ("transfers", "completed", "joules_per_gb",
+                             "slowdown")}
+
+    if args.json is not None:
+        record = {
+            "metrics": bench,
+            "meta": {
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "smoke": args.smoke,
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
     if summary:
         print("# summary", json.dumps(summary, indent=2), file=sys.stderr)

@@ -22,9 +22,26 @@ from .controllers import (Controller, ControllerInit,  # noqa: F401
                           make_controller, register_controller)
 from .scenario import Scenario, group_count, run, sweep  # noqa: F401
 
+# Fleet-scale entry points.  repro.fleet builds ON TOP of the Scenario /
+# engine substrate and the controller registry above, so these re-exports
+# resolve lazily (PEP 562) — importing repro.fleet first must not recurse
+# back into a half-initialized repro.api.
+_FLEET_EXPORTS = ("FleetReport", "Host", "TransferRequest", "host_pool",
+                  "poisson_trace", "replay_trace", "run_fleet")
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        from repro import fleet
+        return getattr(fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
-    "Controller", "ControllerInit", "IsmailTargetController",
-    "Scenario", "StaticBaselineController", "TransferResult",
-    "TunerController", "as_controller", "group_count", "list_controllers",
-    "make_controller", "register_controller", "run", "sweep",
+    "Controller", "ControllerInit", "FleetReport", "Host",
+    "IsmailTargetController", "Scenario", "StaticBaselineController",
+    "TransferRequest", "TransferResult", "TunerController", "as_controller",
+    "group_count", "host_pool", "list_controllers", "make_controller",
+    "poisson_trace", "register_controller", "replay_trace", "run",
+    "run_fleet", "sweep",
 ]

@@ -73,14 +73,21 @@ class _GroupKey(NamedTuple):
     n_partitions: int
 
 
+def ctrl_stride(ctrl: Controller, dt: float) -> int:
+    """Engine ticks between controller invocations (the "Timeout" stride).
+
+    Shared by the sweep group key and the fleet wave scheduler so a transfer
+    ticks its controller at the same absolute step indices on either path.
+    """
+    return max(int(round(ctrl.timeout_s / dt)), 1) if ctrl.tunes else 1
+
+
 def _group_key(ctrl: Controller, sc: Scenario, n_partitions: int) -> _GroupKey:
     """Single source of truth for both ``_prepare`` (actual grouping) and
     ``group_count`` (prediction)."""
     n_steps = int(round(sc.total_s / sc.dt))
-    ctrl_every = (max(int(round(ctrl.timeout_s / sc.dt)), 1)
-                  if ctrl.tunes else 1)
-    return _GroupKey(ctrl.code(), sc.cpu, n_steps, sc.dt, ctrl_every,
-                     n_partitions)
+    return _GroupKey(ctrl.code(), sc.cpu, n_steps, sc.dt,
+                     ctrl_stride(ctrl, sc.dt), n_partitions)
 
 
 class _Prepared(NamedTuple):
@@ -143,25 +150,38 @@ def _postprocess(sim, metrics, prep: _Prepared) -> TransferResult:
 _PARTITION_FIELDS = ("pp", "par", "total_mb", "avg_file_mb", "static_w")
 
 
-def _pad_partitions(prep: _Prepared, n_partitions: int) -> _Prepared:
-    """Widen a prepared scenario to ``n_partitions`` with zero-byte partitions.
+def pad_partition_inputs(inputs: ScanInputs,
+                         n_partitions: int) -> ScanInputs:
+    """Widen ``ScanInputs`` to ``n_partitions`` with zero-byte partitions.
 
     A zero-byte partition is born drained: it gets no channels, contributes
     zero demand/bytes/energy, and the contention estimate averages over
     active partitions only — so padding is a bit-exact no-op on the results.
     ``sweep`` uses it to merge scenarios with different dataset counts into
-    one compiled executable.
+    one compiled executable; the fleet wave scheduler
+    (``repro.fleet.scheduler``) uses it to make every transfer in a trace
+    shape-compatible regardless of its dataset count.
     """
-    p = prep.key.n_partitions
+    p = len(np.asarray(inputs.total_mb))
     if p == n_partitions:
-        return prep
+        return inputs
+    if p > n_partitions:
+        raise ValueError(f"cannot shrink {p} partitions to {n_partitions}")
     pad = n_partitions - p
-    inputs = prep.inputs._replace(**{
-        f: np.concatenate([np.asarray(getattr(prep.inputs, f)),
+    return inputs._replace(**{
+        f: np.concatenate([np.asarray(getattr(inputs, f)),
                            np.zeros(pad, np.float32)])
         for f in _PARTITION_FIELDS})
-    return prep._replace(key=prep.key._replace(n_partitions=n_partitions),
-                         inputs=inputs)
+
+
+def _pad_partitions(prep: _Prepared, n_partitions: int) -> _Prepared:
+    """Widen a prepared scenario to ``n_partitions`` (see
+    :func:`pad_partition_inputs`)."""
+    if prep.key.n_partitions == n_partitions:
+        return prep
+    return prep._replace(
+        key=prep.key._replace(n_partitions=n_partitions),
+        inputs=pad_partition_inputs(prep.inputs, n_partitions))
 
 
 def _merged_partition_counts(keys) -> dict:

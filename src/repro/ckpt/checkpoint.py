@@ -23,7 +23,6 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Any, Optional
 
 import jax

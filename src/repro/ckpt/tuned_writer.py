@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy_model, tuners
+from repro.core import tuners
 from repro.core.types import CpuProfile, NetworkProfile, SLA, SLAPolicy
 
 

@@ -21,7 +21,7 @@ import math
 
 import jax.numpy as jnp
 
-from .types import (CpuProfile, DatasetSpec, NetworkProfile, SLA,
+from .types import (CpuProfile, NetworkProfile,
                     TransferParams)
 
 

@@ -305,6 +305,99 @@ def get_runner(controller_code, cpu: CpuProfile, n_steps: int, dt: float,
     return jax.jit(core)
 
 
+# ------------------------------------------------------------ wave hooks --
+#
+# The fleet layer (repro.fleet) runs thousands of concurrent transfers in
+# streaming *waves*: each wave advances every active transfer by a fixed
+# window of ticks, then the host-side scheduler drains completed lanes,
+# refills from the arrival queue, and rescales per-transfer bandwidth for
+# NIC contention.  That needs two things the figure-grid runners don't have:
+#
+#   * resumable carries — a wave starts from the (SimState, TunerState) the
+#     previous wave produced, with the global step index threaded through so
+#     controller-tick alignment (``step_idx % ctrl_every``) survives wave
+#     boundaries;
+#   * a scalar per-lane bandwidth share — ``ScanInputs.bw`` carries one
+#     float (the host NIC share for this wave) instead of an [n_steps]
+#     schedule, and is broadcast across the wave's ticks.
+#
+# The wave core shares ``make_step_fn`` with the figure-grid runners, so a
+# transfer that never experiences contention is bit-identical between the
+# two paths (tests/test_fleet.py).  Waves return only the final carries plus
+# the absolute tick at which the lane drained (-1 if still live): per-tick
+# traces would be O(fleet size x horizon) and fleet metrics only need
+# completion tick + the frozen ``energy_j`` / ``bytes_moved``.
+
+
+def build_wave_core(controller, cpu: CpuProfile, *, wave_steps: int,
+                    dt: float, ctrl_every: int):
+    """One wave of one transfer: (inputs, carry, step0) -> (carry', done_at).
+
+    ``step0`` is the lane's absolute tick index at wave start (ticks since
+    the transfer was admitted); ``done_at`` is the absolute tick during
+    which the transfer drained, or -1 if it is still live after the wave.
+    Completion masking freezes drained lanes, so running a done lane for
+    further waves is a no-op — the scheduler drains them instead.
+    """
+
+    def core(inp: ScanInputs, sim0, ts0, step0):
+        step = make_step_fn(controller, cpu, inp, dt=dt,
+                            ctrl_every=ctrl_every)
+
+        def wave_step(carry, xs):
+            carry, m = step(carry, xs)
+            return carry, m.done
+
+        idx = step0 + jnp.arange(wave_steps, dtype=jnp.int32)
+        bw = jnp.broadcast_to(jnp.asarray(inp.bw, jnp.float32),
+                              (wave_steps,))
+        (sim, ts), done = jax.lax.scan(wave_step, (sim0, ts0), (idx, bw))
+        done_at = jnp.where(done[-1],
+                            step0 + jnp.argmax(done).astype(jnp.int32),
+                            jnp.asarray(-1, jnp.int32))
+        return sim, ts, done_at
+
+    return core
+
+
+@functools.lru_cache(maxsize=None)
+def get_wave_runner(controller_code, cpu: CpuProfile, wave_steps: int,
+                    dt: float, ctrl_every: int):
+    """Jitted, vmapped wave core, cached per controller code group.
+
+    Lanes are independent (no early-exit barrier inside a wave), so padding
+    lanes with drained transfers (zero remaining bytes) is free: they are
+    frozen from tick 0.
+    """
+    core = build_wave_core(controller_code, cpu, wave_steps=wave_steps,
+                           dt=dt, ctrl_every=ctrl_every)
+    return jax.jit(jax.vmap(core))
+
+
+@functools.lru_cache(maxsize=None)
+def get_sharded_wave_runner(controller_code, cpu: CpuProfile,
+                            wave_steps: int, dt: float, ctrl_every: int,
+                            devices: tuple):
+    """Wave runner sharded over ``devices`` along the lane axis.
+
+    Same contract as :func:`get_wave_runner`; lane batches must be padded to
+    a multiple of ``len(devices)`` (``repro.distributed.sharding.pad_batch``
+    with ``fill="zero"`` adds drained no-op lanes).  The carry buffers are
+    donated — each wave consumes the previous wave's output states.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = shd.batch_mesh(devices)
+    core = build_wave_core(controller_code, cpu, wave_steps=wave_steps,
+                           dt=dt, ctrl_every=ctrl_every)
+    f = shd.shard_map(jax.vmap(core), mesh=mesh,
+                      in_specs=(P("batch"),) * 4,
+                      out_specs=P("batch"), check_vma=False)
+    return jax.jit(f, donate_argnums=(1, 2))
+
+
 @functools.lru_cache(maxsize=None)
 def get_sharded_runner(controller_code, cpu: CpuProfile, n_steps: int,
                        dt: float, ctrl_every: int, devices: tuple,

@@ -57,7 +57,8 @@ def compressed_grad_tree(grads, errors=None):
         return q, s, gf - deq
 
     out = jax.tree.map(one, grads, errors)
-    is_t = lambda x: isinstance(x, tuple)
+    def is_t(x):
+        return isinstance(x, tuple)
     qs = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
     ss = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
     es = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)

@@ -74,13 +74,22 @@ def batch_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("batch",))
 
 
-def pad_batch(tree, multiple: int):
-    """Pad axis 0 of every leaf up to a multiple of ``multiple`` by repeating
-    the last row.  Returns ``(padded_tree, original_batch_size)``; callers
-    slice results back to the original size.  Repeating a real row (instead
-    of zero-fill) keeps the padding lanes numerically well-behaved — they
-    simulate a duplicate scenario and are dropped on the way out.
+def pad_batch(tree, multiple: int, *, fill: str = "repeat"):
+    """Pad axis 0 of every leaf up to a multiple of ``multiple``.
+
+    Returns ``(padded_tree, original_batch_size)``; callers slice results
+    back to the original size.  ``fill`` selects the padding rows:
+
+    * ``"repeat"`` (default) repeats the last row — numerically
+      well-behaved for sweep groups, where a padding lane simulates a
+      duplicate scenario and the group's early-exit loop waits for it to
+      finish like any other lane.
+    * ``"zero"`` appends zero rows — what the fleet wave scheduler wants: a
+      zeroed engine lane has no bytes remaining, so it is born drained and
+      frozen from tick 0, costing nothing.
     """
+    if fill not in ("repeat", "zero"):
+        raise ValueError(f"unknown fill mode {fill!r}")
     sizes = {np.shape(leaf)[0] for leaf in jax.tree.leaves(tree)}
     if len(sizes) != 1:
         raise ValueError(f"inconsistent batch sizes in pytree: {sizes}")
@@ -88,6 +97,11 @@ def pad_batch(tree, multiple: int):
     pad = (-b) % multiple
     if pad == 0:
         return tree, b
+    if fill == "zero":
+        return jax.tree.map(
+            lambda x: np.concatenate(
+                [x, np.zeros((pad,) + np.shape(x)[1:], np.asarray(x).dtype)]),
+            tree), b
     return jax.tree.map(
         lambda x: np.concatenate([x, np.repeat(x[-1:], pad, axis=0)]),
         tree), b

@@ -1,0 +1,39 @@
+"""repro.fleet — trace-driven, fleet-scale transfer simulation.
+
+The paper evaluates tuners one transfer at a time; its motivation (100+ TWh
+of global data-movement energy) is a *fleet* problem.  This package runs
+thousands of concurrent transfers — Poisson or replayed-trace arrivals
+across a pool of hosts, each host with a transfer-slot budget and a shared
+NIC whose capacity is split among its in-flight transfers — on top of the
+``repro.api`` Scenario/engine substrate.
+
+Execution is in streaming *waves*: all active transfers advance by one wave
+window through the grouped ``jit(vmap(scan))`` engine (one launch per
+controller code group, lanes padded to shape-compatible buckets), completed
+lanes are drained and refilled from the arrival queue, and per-host NIC
+contention rescales each transfer's available bandwidth between waves.
+
+Quickstart::
+
+    from repro import fleet
+    from repro.core.types import CHAMELEON, DatasetSpec
+
+    hosts = fleet.host_pool(8, nic_mbps=1250.0, slots=16)
+    trace = fleet.poisson_trace(
+        rate_per_s=2.0, n_transfers=1000, seed=0,
+        datasets=((DatasetSpec("d", 100, 2000.0, 20.0),),),
+        controllers=("eemt", "me", "wget/curl"),
+        profile=CHAMELEON)
+    report = fleet.run_fleet(trace, hosts, wave_s=30.0, dt=0.1)
+    print(report.summary())
+"""
+from .aggregates import FleetReport, FleetTransfer  # noqa: F401
+from .arrivals import (TransferRequest, poisson_trace,  # noqa: F401
+                       replay_trace)
+from .hosts import Host, host_pool  # noqa: F401
+from .scheduler import run_fleet  # noqa: F401
+
+__all__ = [
+    "FleetReport", "FleetTransfer", "Host", "TransferRequest", "host_pool",
+    "poisson_trace", "replay_trace", "run_fleet",
+]

@@ -1,0 +1,170 @@
+"""Fleet-level result records and aggregate metrics.
+
+Per-transfer observables come straight from the engine's frozen final state
+(energy integrated over the transfer only — completion masking), plus the
+scheduler's queueing bookkeeping (admission wait).  Aggregates follow the
+serving-systems conventions:
+
+* **joules/GB** — total transfer-attributed energy over total bytes moved;
+  the fleet analogue of the paper's per-transfer energy axis.
+* **slowdown** — response time (queue wait + transfer duration) over the
+  transfer's ideal solo network time ``bytes / path_bandwidth``; 1.0 is a
+  perfectly scheduled, network-bound transfer, and p50/p95/p99 over the
+  fleet expose the contention tail.
+* **host utilization** — per host, the fraction of simulated waves with at
+  least one in-flight transfer (busy fraction) and bytes moved over NIC
+  capacity x busy time (NIC utilization).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTransfer:
+    """Outcome of one transfer inside a fleet run."""
+
+    name: str
+    controller: str
+    host: str
+    arrival_s: float
+    start_s: float                  # admission time (>= arrival_s)
+    time_s: float                   # transfer duration (excludes queue wait)
+    energy_j: float
+    moved_mb: float
+    completed: bool
+    ideal_s: float                  # solo network-bound lower bound
+
+    @property
+    def wait_s(self) -> float:
+        return self.start_s - self.arrival_s
+
+    @property
+    def response_s(self) -> float:
+        return self.wait_s + self.time_s
+
+    @property
+    def slowdown(self) -> float:
+        return self.response_s / max(self.ideal_s, 1e-9)
+
+
+def _percentiles(values) -> dict:
+    if len(values) == 0:
+        # None, not NaN: json.dumps would emit the non-standard `NaN`
+        # literal, making BENCH records unparseable by strict readers
+        # exactly in the all-transfers-failed cases worth inspecting.
+        return {"p50": None, "p95": None, "p99": None}
+    v = np.asarray(values, np.float64)
+    return {"p50": float(np.percentile(v, 50)),
+            "p95": float(np.percentile(v, 95)),
+            "p99": float(np.percentile(v, 99))}
+
+
+@dataclasses.dataclass(frozen=True)
+class HostStats:
+    """Per-host utilization over one fleet run."""
+
+    name: str
+    moved_mb: float
+    busy_frac: float                # fraction of waves with >= 1 transfer
+    nic_util: float                 # moved / (nic capacity x busy seconds)
+    peak_active: int                # max concurrent transfers observed
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    """Everything a fleet run produced, with aggregate views.
+
+    ``transfers`` preserves canonical admission order; numbers in the
+    aggregate views are plain floats so the report serializes to JSON
+    (``to_json``) for the BENCH_* perf-trajectory records.
+    """
+
+    transfers: tuple
+    host_stats: tuple
+    sim_s: float                    # simulated seconds until the fleet drained
+    waves: int
+    wave_s: float
+    dt: float
+    dropped: int = 0                # requests never admitted (horizon cut)
+
+    # ------------------------------------------------------------ totals --
+
+    @property
+    def total_energy_j(self) -> float:
+        return float(sum(t.energy_j for t in self.transfers))
+
+    @property
+    def total_gb(self) -> float:
+        return float(sum(t.moved_mb for t in self.transfers)) / 1024.0
+
+    @property
+    def joules_per_gb(self) -> float:
+        return self.total_energy_j / max(self.total_gb, 1e-9)
+
+    @property
+    def completed(self) -> int:
+        return sum(t.completed for t in self.transfers)
+
+    def slowdowns(self) -> dict:
+        return _percentiles([t.slowdown for t in self.transfers
+                             if t.completed])
+
+    # ------------------------------------------------------- breakdowns --
+
+    def by_controller(self) -> dict:
+        """Per-controller aggregate rows (the fleet-scale comparison the
+        single-transfer figure grids cannot make)."""
+        groups: dict[str, list[FleetTransfer]] = defaultdict(list)
+        for t in self.transfers:
+            groups[t.controller].append(t)
+        out = {}
+        for name in sorted(groups):
+            ts = groups[name]
+            gb = sum(t.moved_mb for t in ts) / 1024.0
+            energy = sum(t.energy_j for t in ts)
+            out[name] = {
+                "transfers": len(ts),
+                "completed": sum(t.completed for t in ts),
+                "energy_j": float(energy),
+                "gb": float(gb),
+                "joules_per_gb": float(energy / max(gb, 1e-9)),
+                "slowdown": _percentiles(
+                    [t.slowdown for t in ts if t.completed]),
+                "mean_time_s": float(np.mean([t.time_s for t in ts])),
+                "mean_wait_s": float(np.mean([t.wait_s for t in ts])),
+            }
+        return out
+
+    def summary(self) -> dict:
+        return {
+            "transfers": len(self.transfers),
+            "completed": self.completed,
+            "dropped": self.dropped,
+            "hosts": len(self.host_stats),
+            "sim_s": self.sim_s,
+            "waves": self.waves,
+            "total_energy_j": self.total_energy_j,
+            "total_gb": self.total_gb,
+            "joules_per_gb": self.joules_per_gb,
+            "slowdown": self.slowdowns(),
+            "host_busy_frac": {h.name: h.busy_frac
+                               for h in self.host_stats},
+            "host_nic_util": {h.name: h.nic_util for h in self.host_stats},
+            "by_controller": self.by_controller(),
+        }
+
+    def to_json(self, path: Optional[str] = None, **extra) -> str:
+        """Serialize ``summary()`` (+ caller extras, e.g. wall-clock) to
+        JSON; writes to ``path`` when given."""
+        payload = dict(self.summary(), **extra)
+        text = json.dumps(payload, indent=2, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text

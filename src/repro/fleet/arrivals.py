@@ -1,0 +1,140 @@
+"""Arrival traces: what arrives when, carrying what, tuned by whom.
+
+A trace is a tuple of :class:`TransferRequest` — plain frozen metadata; all
+numeric state lives in the engine once the scheduler admits the request.
+Two constructors cover the workload classes the fleet layer targets:
+
+* :func:`poisson_trace` — synthetic open-loop arrivals (exponential
+  inter-arrival gaps from a seeded generator, controllers/datasets cycled
+  or sampled), the standard model for transfer-service workloads;
+* :func:`replay_trace` — replayed historical logs (list of dicts, e.g.
+  parsed from a JSON export), the GreenDataFlow/cross-layer-log setting.
+
+Both are deterministic: the same inputs produce the same trace, and
+``run_fleet`` is invariant to the *order* of the trace tuple (it sorts by
+arrival time with a content tie-break), so shuffling a trace never changes
+fleet totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import NetworkProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRequest:
+    """One transfer in a fleet trace.
+
+    ``controller`` accepts anything ``repro.api.as_controller`` does (a
+    registry name, a Controller instance, a legacy SLA).  ``profile`` is the
+    transfer's *path* (RTT, per-flow bandwidth cap, loss knee); the shared
+    host NIC on top of it is the host's, and contention rescaling happens in
+    the scheduler.  ``host`` pins the transfer to a pool index; ``None``
+    lets the scheduler assign one.  ``total_s`` is the per-transfer budget
+    (quantized up to a whole number of waves).
+    """
+
+    arrival_s: float
+    datasets: tuple
+    controller: Any
+    profile: NetworkProfile
+    host: Optional[int] = None
+    name: Optional[str] = None
+    total_s: float = 3600.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "datasets", tuple(self.datasets))
+        if self.arrival_s < 0:
+            raise ValueError(f"negative arrival_s: {self.arrival_s}")
+
+
+def request_sort_key(req: TransferRequest) -> tuple:
+    """Canonical ordering: arrival time, then the request's FULL content.
+
+    The scheduler sorts the trace with this key so host assignment — and
+    therefore every downstream number — is a function of what arrived when,
+    not of the order the caller happened to build the list in.  Every field
+    that can influence a result participates (full dataset shapes, the
+    controller's repr — frozen dataclasses, so repr covers all hyper-
+    parameters — the whole path profile, and the budget): requests that tie
+    on every component are genuinely interchangeable, so their relative
+    order cannot affect fleet totals.
+    """
+    ctrl = (req.controller.lower() if isinstance(req.controller, str)
+            else repr(req.controller))
+    return (req.arrival_s,
+            req.name or "",
+            ctrl,
+            tuple((s.name, s.num_files, s.total_mb, s.avg_file_mb,
+                   s.std_file_mb) for s in req.datasets),
+            dataclasses.astuple(req.profile),
+            req.total_s,
+            -1 if req.host is None else req.host)
+
+
+def poisson_trace(*, rate_per_s: float, n_transfers: int,
+                  datasets: Sequence[tuple], controllers: Sequence[Any],
+                  profile: NetworkProfile, seed: int = 0,
+                  total_s: float = 3600.0,
+                  name_prefix: str = "xfer") -> tuple[TransferRequest, ...]:
+    """Open-loop Poisson arrivals: exponential gaps at ``rate_per_s``.
+
+    ``datasets`` is a menu of dataset tuples and ``controllers`` a menu of
+    controller specs; each arrival samples one of each uniformly from a
+    ``np.random.default_rng(seed)`` stream, so the trace is a pure function
+    of its arguments.
+    """
+    if rate_per_s <= 0:
+        raise ValueError(f"rate_per_s must be positive, got {rate_per_s}")
+    if n_transfers <= 0:
+        raise ValueError(f"n_transfers must be positive, got {n_transfers}")
+    datasets = tuple(tuple(d) for d in datasets)
+    controllers = tuple(controllers)
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n_transfers)
+    arrivals = np.cumsum(gaps)
+    ds_idx = rng.integers(0, len(datasets), size=n_transfers)
+    ctrl_idx = rng.integers(0, len(controllers), size=n_transfers)
+    width = len(str(n_transfers - 1))
+    return tuple(
+        TransferRequest(
+            arrival_s=float(arrivals[i]),
+            datasets=datasets[ds_idx[i]],
+            controller=controllers[ctrl_idx[i]],
+            profile=profile,
+            name=f"{name_prefix}-{i:0{width}d}",
+            total_s=total_s,
+        )
+        for i in range(n_transfers))
+
+
+_REPLAY_FIELDS = {f.name for f in dataclasses.fields(TransferRequest)}
+
+
+def replay_trace(records: Sequence[dict], *,
+                 profile: Optional[NetworkProfile] = None,
+                 ) -> tuple[TransferRequest, ...]:
+    """Build a trace from historical-log records (dicts).
+
+    Each record supplies :class:`TransferRequest` fields by name;
+    ``profile`` fills in a default path profile for records without one.
+    Unknown keys raise — silently dropping log columns is how replay
+    studies go wrong.
+    """
+    out = []
+    for i, rec in enumerate(records):
+        unknown = set(rec) - _REPLAY_FIELDS
+        if unknown:
+            raise ValueError(f"record {i} has unknown fields {sorted(unknown)}")
+        rec = dict(rec)
+        if "profile" not in rec:
+            if profile is None:
+                raise ValueError(f"record {i} has no profile and no default "
+                                 f"was given")
+            rec["profile"] = profile
+        out.append(TransferRequest(**rec))
+    return tuple(out)

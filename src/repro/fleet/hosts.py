@@ -1,0 +1,52 @@
+"""End-system host model for fleet simulation.
+
+A :class:`Host` is an end system transfers run *on*: a CPU profile (the
+operating point every transfer's controller tunes within), a transfer-slot
+budget (admission control — the host's core budget expressed as how many
+concurrent transfer processes it will run), and a shared NIC.
+
+The NIC is the contention point: when the per-flow bandwidth demands of a
+host's in-flight transfers exceed ``nic_mbps``, every transfer on that host
+has its available bandwidth rescaled proportionally for the next wave (see
+``repro.fleet.scheduler``).  When total demand fits, transfers run exactly
+as they would alone — the zero-contention fleet path is bit-identical to
+independent ``api.run`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.types import CpuProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class Host:
+    """One end system in the fleet pool.
+
+    ``slots`` caps concurrent transfers (0 = unlimited): arrivals beyond it
+    queue in the scheduler until a slot frees.  This is the host's
+    core/frequency budget in admission form — each transfer's controller
+    still picks its own operating point inside the engine, but the host
+    bounds how many such processes it multiplexes.
+    """
+
+    name: str
+    nic_mbps: float = 1250.0          # shared NIC capacity (MB/s)
+    cpu: CpuProfile = CpuProfile()
+    slots: int = 0
+
+    def __post_init__(self):
+        if self.nic_mbps <= 0:
+            raise ValueError(f"nic_mbps must be positive, got {self.nic_mbps}")
+        if self.slots < 0:
+            raise ValueError(f"slots must be >= 0, got {self.slots}")
+
+
+def host_pool(n: int, *, nic_mbps: float = 1250.0,
+              cpu: CpuProfile = CpuProfile(), slots: int = 0,
+              name_prefix: str = "host") -> tuple[Host, ...]:
+    """A homogeneous pool of ``n`` hosts (the common benchmark shape)."""
+    if n <= 0:
+        raise ValueError(f"need at least one host, got {n}")
+    return tuple(Host(name=f"{name_prefix}-{i}", nic_mbps=nic_mbps,
+                      cpu=cpu, slots=slots) for i in range(n))

@@ -5,6 +5,8 @@ it lowers to Mosaic.  ``use_kernel=False`` falls back to the oracle.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from .flash_attention import flash_attention_bhtd
@@ -43,11 +45,6 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
 
 # ---------------------------------------------------------- trainable -----
 
-import functools
-
-import jax.numpy as jnp
-
-
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention_trainable(q, k, v, causal=True, window=0,
                               interpret=True):
@@ -59,7 +56,9 @@ def flash_attention_trainable(q, k, v, causal=True, window=0,
 
 def _fa_fwd(q, k, v, causal, window, interpret):
     from .flash_attention import flash_attention_bhtd
-    tr = lambda a: a.transpose(0, 2, 1, 3)
+
+    def tr(a):
+        return a.transpose(0, 2, 1, 3)
     o, lse = flash_attention_bhtd(tr(q), tr(k), tr(v), causal=causal,
                                   window=window, interpret=interpret,
                                   return_lse=True)
@@ -69,7 +68,9 @@ def _fa_fwd(q, k, v, causal, window, interpret):
 def _fa_bwd(causal, window, interpret, res, g):
     from .flash_attention_bwd import flash_attention_bwd_bhtd
     q, k, v, o_t, lse = res
-    tr = lambda a: a.transpose(0, 2, 1, 3)
+
+    def tr(a):
+        return a.transpose(0, 2, 1, 3)
     dq, dk, dv = flash_attention_bwd_bhtd(
         tr(q), tr(k), tr(v), o_t, lse, tr(g), causal=causal, window=window,
         interpret=interpret)

@@ -11,11 +11,14 @@ def wkv(r, k, v, w, u, *, bt: int = 128, interpret=None):
     """r,k,v,w [B,T,H,hd]; u [H,hd] -> y [B,T,H,hd]."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    tr = lambda a: a.transpose(0, 2, 1, 3)
+
+    def tr(a):
+        return a.transpose(0, 2, 1, 3)
     y = wkv_bhtd(tr(r), tr(k), tr(v), tr(w), u, bt=bt, interpret=interpret)
     return y.transpose(0, 2, 1, 3)
 
 
 def wkv_oracle(r, k, v, w, u):
-    tr = lambda a: a.transpose(0, 2, 1, 3)
+    def tr(a):
+        return a.transpose(0, 2, 1, 3)
     return wkv_ref(tr(r), tr(k), tr(v), tr(w), u).transpose(0, 2, 1, 3)

@@ -89,7 +89,6 @@ class ModelConfig:
         hd = self.resolved_head_dim
         d = self.d_model
         emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
-        per_layer = 0
         n_blocks = {"attn": 0, "local": 0, "rwkv": 0, "rglru": 0}
         for i in range(self.num_layers):
             n_blocks[self.block_pattern[i % len(self.block_pattern)]] += 1

@@ -97,7 +97,8 @@ def forward(cfg: ModelConfig, params, tokens, *, positions=None, caches=None,
         block = jax.checkpoint(block, policy=L.remat_policy(cfg))
 
     if cfg.unroll_layers:
-        take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+        def take(tree, i):
+            return jax.tree.map(lambda a: a[i], tree)
         auxs = []
         ncs = []
         for i in range(cfg.num_layers):

@@ -12,7 +12,6 @@ validated against this module's ``wkv_scan``).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -261,7 +260,8 @@ def forward(cfg: ModelConfig, params, tokens, *, states=None,
     cm_last [L,B,D]) or None. Returns (logits, new_states, aux=0)."""
     x = _ln(params["ln0"], params["embed"][tokens])
 
-    blk = lambda bp, x: block_fwd(cfg, bp, x)[0]
+    def blk(bp, x):
+        return block_fwd(cfg, bp, x)[0]
     if cfg.remat and states is None:
         from . import layers as L
         blk = jax.checkpoint(blk, policy=L.remat_policy(cfg))
@@ -275,7 +275,8 @@ def forward(cfg: ModelConfig, params, tokens, *, states=None,
         return x, st2
 
     if cfg.unroll_layers:
-        take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+        def take(tree, i):
+            return jax.tree.map(lambda a: a[i], tree)
         sts = []
         for i in range(cfg.num_layers):
             st = take(states, i) if states is not None else None

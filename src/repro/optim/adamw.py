@@ -29,7 +29,8 @@ class OptState(NamedTuple):
 
 
 def adamw_init(params) -> OptState:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return OptState(mu=jax.tree.map(zeros, params),
                     nu=jax.tree.map(zeros, params),
                     count=jnp.zeros((), jnp.int32))

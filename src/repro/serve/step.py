@@ -5,7 +5,6 @@ one new token against a populated KV cache / recurrent state.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import ModelBundle

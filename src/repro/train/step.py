@@ -5,8 +5,7 @@ optional int8 gradient-compression path (repro.distributed.collectives).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ import time
 from typing import Callable, Iterator, Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, restore_latest
 from repro.models import ModelBundle

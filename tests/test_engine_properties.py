@@ -6,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro import api
 from repro.core import (SLA, SLAPolicy, CpuProfile, DatasetSpec,
-                        NetworkProfile, simulate)
+                        NetworkProfile)
 from repro.core.types import CHAMELEON
 
 CPU = CpuProfile()
@@ -38,8 +38,9 @@ def datasets(draw):
 def test_transfer_invariants(prof, specs, pol):
     total_mb = sum(s.total_mb for s in specs)
     budget = max(total_mb / (prof.bandwidth_mbps * 0.02), 600.0)
-    r = simulate(prof, CPU, specs, SLA(policy=pol, max_ch=64),
-                 total_s=min(budget, 20000.0), dt=0.25)
+    r = api.run(api.Scenario(profile=prof, datasets=specs,
+                             controller=SLA(policy=pol, max_ch=64), cpu=CPU,
+                             total_s=min(budget, 20000.0), dt=0.25))
     # throughput never exceeds the physical link
     assert r.avg_tput_MBps <= prof.bandwidth_mbps * 1.001
     assert r.energy_j > 0
@@ -51,11 +52,13 @@ def test_transfer_invariants(prof, specs, pol):
 @given(st.floats(0.2, 0.8))
 @settings(max_examples=6, deadline=None)
 def test_eett_never_wildly_overshoots(frac):
-    from repro.core import CHAMELEON, MIXED
+    from repro.core import MIXED
     tgt = CHAMELEON.bandwidth_mbps * frac
-    r = simulate(CHAMELEON, CPU, MIXED,
-                 SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
-                     target_tput_mbps=tgt, max_ch=64), total_s=2400)
+    r = api.run(api.Scenario(
+        profile=CHAMELEON, datasets=MIXED,
+        controller=SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
+                       target_tput_mbps=tgt, max_ch=64),
+        cpu=CPU, total_s=2400))
     assert r.avg_tput_MBps <= tgt * 1.5 + 100.0
 
 

@@ -1,0 +1,270 @@
+"""Fleet simulation invariants.
+
+The two load-bearing properties (ISSUE acceptance criteria):
+
+* **Zero-contention equivalence** — wave execution of N transfers that
+  never share a NIC is *bit-identical* to N independent ``api.run`` calls:
+  the wave engine shares the per-tick step function, carries resume across
+  wave boundaries exactly, and the scalar bandwidth share of 1.0 matches
+  the flat schedule.
+* **Arrival-order permutation** — every scheduling decision is a function
+  of (arrival time, request content), so shuffling the trace tuple changes
+  nothing, bit for bit.
+"""
+import random
+
+import pytest
+
+from repro import api, fleet
+from repro.core.types import CHAMELEON, CLOUDLAB, CpuProfile, DatasetSpec
+
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+ONE = (DatasetSpec("c", 50, 500.0, 10.0),)
+BIG = (DatasetSpec("a", 2000, 4000.0, 2.0),
+       DatasetSpec("b", 100, 6000.0, 60.0))
+
+# Effectively infinite NIC: transfers never contend even when they share
+# a host.
+NO_CONTENTION = 1e9
+
+
+def _fleet_by_name(report):
+    return {t.name: t for t in report.transfers}
+
+
+# ----------------------------------------------------------- equivalence --
+
+def test_zero_contention_matches_independent_runs_bit_exactly():
+    """N transfers on 1 uncontended host == N independent api.run calls.
+
+    Covers multi-wave carries (BIG spans several waves), partition padding
+    (FAST/ONE mix), different controllers sharing a wave, and simultaneous
+    arrivals.
+    """
+    cases = [
+        ("t-eemt", FAST, api.make_controller("eemt", max_ch=64)),
+        ("t-me", ONE, api.make_controller("me", max_ch=64)),
+        ("t-static", FAST, "wget/curl"),
+        ("t-big", BIG, api.make_controller("eemt", max_ch=64)),
+    ]
+    reqs = [fleet.TransferRequest(arrival_s=0.0, datasets=ds, controller=c,
+                                  profile=CHAMELEON, name=n, total_s=600.0)
+            for n, ds, c in cases]
+    report = fleet.run_fleet(reqs, fleet.host_pool(1, nic_mbps=NO_CONTENTION),
+                             wave_s=5.0, dt=0.1)
+    got = _fleet_by_name(report)
+    for n, ds, c in cases:
+        solo = api.run(api.Scenario(profile=CHAMELEON, datasets=ds,
+                                    controller=c, total_s=600.0))
+        ft = got[n]
+        assert ft.completed and solo.completed
+        assert ft.time_s == solo.time_s            # bit-exact, no tolerance
+        assert ft.energy_j == solo.energy_j
+        assert ft.wait_s == 0.0
+
+
+def test_permutation_invariance_without_names_or_distinct_totals():
+    """Regression: the canonical sort key must see FULL request content.
+
+    Two unnamed requests with identical total bytes but different file
+    shapes (and therefore different engine behaviour) used to tie in the
+    sort key, letting caller order leak into host assignment on a
+    heterogeneous pool.
+    """
+    ds_a = (DatasetSpec("d", 50, 500.0, 10.0),)
+    ds_b = (DatasetSpec("d", 5000, 500.0, 0.1),)   # same bytes, tiny files
+    hosts = (fleet.Host("h0", nic_mbps=NO_CONTENTION),
+             fleet.Host("h1", nic_mbps=NO_CONTENTION,
+                        cpu=CpuProfile(name="slow", num_cores=4)))
+    r1 = fleet.TransferRequest(arrival_s=0.0, datasets=ds_a,
+                               controller="eemt", profile=CHAMELEON,
+                               total_s=600.0)
+    r2 = fleet.TransferRequest(arrival_s=0.0, datasets=ds_b,
+                               controller="eemt", profile=CHAMELEON,
+                               total_s=600.0)
+    a = fleet.run_fleet([r1, r2], hosts, wave_s=5.0, dt=0.1)
+    b = fleet.run_fleet([r2, r1], hosts, wave_s=5.0, dt=0.1)
+    assert a.total_energy_j == b.total_energy_j
+    assert [t.energy_j for t in a.transfers] == \
+        [t.energy_j for t in b.transfers]
+
+
+def test_arrival_order_permutation_leaves_energy_unchanged():
+    menu = [ONE, FAST, BIG]
+    trace = fleet.poisson_trace(rate_per_s=0.5, n_transfers=24,
+                                datasets=menu,
+                                controllers=("eemt", "me", "wget/curl"),
+                                profile=CHAMELEON, seed=7, total_s=600.0)
+    hosts = fleet.host_pool(3, nic_mbps=CHAMELEON.bandwidth_mbps, slots=4)
+    a = fleet.run_fleet(trace, hosts, wave_s=10.0, dt=0.1)
+    shuffled = list(trace)
+    random.Random(123).shuffle(shuffled)
+    b = fleet.run_fleet(shuffled, hosts, wave_s=10.0, dt=0.1)
+    assert a.total_energy_j == b.total_energy_j
+    assert [t.name for t in a.transfers] == [t.name for t in b.transfers]
+    for x, y in zip(a.transfers, b.transfers):
+        assert (x.energy_j, x.time_s, x.host, x.start_s) == \
+            (y.energy_j, y.time_s, y.host, y.start_s)
+
+
+# ------------------------------------------------------------ contention --
+
+def test_nic_contention_slows_transfers_down():
+    solo = fleet.run_fleet(
+        [fleet.TransferRequest(arrival_s=0.0, datasets=BIG,
+                               controller="eemt", profile=CHAMELEON,
+                               name="solo", total_s=600.0)],
+        fleet.host_pool(1, nic_mbps=CHAMELEON.bandwidth_mbps),
+        wave_s=5.0, dt=0.1)
+    both = fleet.run_fleet(
+        [fleet.TransferRequest(arrival_s=0.0, datasets=BIG,
+                               controller="eemt", profile=CHAMELEON,
+                               name=f"c{i}", total_s=600.0)
+         for i in range(2)],
+        fleet.host_pool(1, nic_mbps=CHAMELEON.bandwidth_mbps),
+        wave_s=5.0, dt=0.1)
+    t_solo = solo.transfers[0].time_s
+    for t in both.transfers:
+        assert t.completed
+        assert t.time_s > t_solo
+
+
+def test_slots_queue_admissions():
+    """With 1 slot, the second simultaneous arrival waits a full service."""
+    reqs = [fleet.TransferRequest(arrival_s=0.0, datasets=ONE,
+                                  controller="wget/curl", profile=CHAMELEON,
+                                  name=f"q{i}", total_s=600.0)
+            for i in range(2)]
+    rep = fleet.run_fleet(reqs, fleet.host_pool(1, nic_mbps=NO_CONTENTION,
+                                                slots=1),
+                          wave_s=5.0, dt=0.1)
+    waits = sorted(t.wait_s for t in rep.transfers)
+    assert waits[0] == 0.0
+    assert waits[1] >= 5.0                  # queued at least one wave
+    assert all(t.completed for t in rep.transfers)
+
+
+def test_host_pinning_and_assignment():
+    reqs = [fleet.TransferRequest(arrival_s=0.0, datasets=ONE,
+                                  controller="wget/curl", profile=CHAMELEON,
+                                  host=1, name="pinned", total_s=600.0),
+            fleet.TransferRequest(arrival_s=0.0, datasets=ONE,
+                                  controller="wget/curl", profile=CHAMELEON,
+                                  name="free", total_s=600.0)]
+    rep = fleet.run_fleet(reqs, fleet.host_pool(2, nic_mbps=NO_CONTENTION),
+                          wave_s=5.0, dt=0.1)
+    got = _fleet_by_name(rep)
+    assert got["pinned"].host == "host-1"
+    # least-loaded sends the unpinned one to the empty host
+    assert got["free"].host == "host-0"
+    with pytest.raises(ValueError):
+        fleet.run_fleet([fleet.TransferRequest(
+            arrival_s=0.0, datasets=ONE, controller="wget/curl",
+            profile=CHAMELEON, host=7)],
+            fleet.host_pool(2), wave_s=5.0, dt=0.1)
+
+
+def test_budget_timeout_marks_incomplete():
+    req = fleet.TransferRequest(arrival_s=0.0, datasets=BIG,
+                                controller="wget/curl", profile=CLOUDLAB,
+                                name="slow", total_s=10.0)   # way too short
+    rep = fleet.run_fleet([req], fleet.host_pool(1, nic_mbps=NO_CONTENTION),
+                          wave_s=5.0, dt=0.1)
+    t = rep.transfers[0]
+    assert not t.completed
+    assert t.moved_mb > 0.0
+    assert t.energy_j > 0.0
+    # Zero completions must still serialize to strictly valid JSON (no NaN
+    # literals): percentiles degrade to null.
+    import json
+    parsed = json.loads(rep.to_json())
+    assert parsed["slowdown"]["p99"] is None
+
+
+def test_horizon_cut_reports_dropped():
+    trace = fleet.poisson_trace(rate_per_s=1.0, n_transfers=20,
+                                datasets=[ONE], controllers=["wget/curl"],
+                                profile=CHAMELEON, seed=3, total_s=600.0)
+    rep = fleet.run_fleet(trace, fleet.host_pool(1, nic_mbps=NO_CONTENTION,
+                                                 slots=1),
+                          wave_s=5.0, dt=0.1, horizon_s=10.0)
+    assert rep.dropped > 0
+    assert len(rep.transfers) + rep.dropped == len(trace)
+
+
+# ------------------------------------------------------------ trace APIs --
+
+def test_poisson_trace_is_deterministic():
+    kw = dict(rate_per_s=2.0, n_transfers=50, datasets=[ONE, FAST],
+              controllers=("eemt", "me"), profile=CHAMELEON, seed=42)
+    a = fleet.poisson_trace(**kw)
+    b = fleet.poisson_trace(**kw)
+    assert a == b
+    assert len(a) == 50
+    arrivals = [r.arrival_s for r in a]
+    assert arrivals == sorted(arrivals)
+    assert fleet.poisson_trace(**{**kw, "seed": 43}) != a
+
+
+def test_replay_trace_roundtrip_and_validation():
+    recs = [{"arrival_s": 0.0, "datasets": ONE, "controller": "me"},
+            {"arrival_s": 3.0, "datasets": FAST, "controller": "eemt",
+             "profile": CLOUDLAB, "host": 0}]
+    trace = fleet.replay_trace(recs, profile=CHAMELEON)
+    assert trace[0].profile is CHAMELEON
+    assert trace[1].profile is CLOUDLAB
+    with pytest.raises(ValueError):
+        fleet.replay_trace([{"arrival_s": 0.0, "datasets": ONE,
+                             "controller": "me", "bogus_column": 1}],
+                           profile=CHAMELEON)
+    with pytest.raises(ValueError):
+        fleet.replay_trace([{"arrival_s": 0.0, "datasets": ONE,
+                             "controller": "me"}])   # no profile anywhere
+
+
+# ------------------------------------------------------------ aggregates --
+
+def test_report_aggregates_and_json():
+    trace = fleet.poisson_trace(rate_per_s=1.0, n_transfers=12,
+                                datasets=[ONE, FAST],
+                                controllers=("eemt", "wget/curl"),
+                                profile=CHAMELEON, seed=5, total_s=600.0)
+    rep = fleet.run_fleet(trace, fleet.host_pool(
+        2, nic_mbps=CHAMELEON.bandwidth_mbps, slots=4), wave_s=5.0, dt=0.1)
+    s = rep.summary()
+    assert s["transfers"] == 12
+    total = sum(row["transfers"] for row in s["by_controller"].values())
+    assert total == 12
+    assert s["total_energy_j"] == pytest.approx(
+        sum(t.energy_j for t in rep.transfers))
+    assert 0.0 < s["joules_per_gb"] < 1e4
+    sd = s["slowdown"]
+    assert sd["p50"] <= sd["p95"] <= sd["p99"]
+    for h in rep.host_stats:
+        assert 0.0 <= h.busy_frac <= 1.0
+        assert h.peak_active <= 4
+    text = rep.to_json(wall_s=1.0)
+    import json
+    parsed = json.loads(text)
+    assert parsed["wall_s"] == 1.0 and parsed["transfers"] == 12
+
+
+def test_api_reexports_fleet_entry_points():
+    assert api.run_fleet is fleet.run_fleet
+    assert api.host_pool is fleet.host_pool
+    assert api.TransferRequest is fleet.TransferRequest
+
+
+def test_heterogeneous_cpu_pools_group_separately():
+    """Hosts with different CPU profiles compile separate wave runners but
+    still produce complete, sane results."""
+    cpus = (CpuProfile(), CpuProfile(name="slow", num_cores=4))
+    hosts = (fleet.Host("h0", nic_mbps=NO_CONTENTION, cpu=cpus[0]),
+             fleet.Host("h1", nic_mbps=NO_CONTENTION, cpu=cpus[1]))
+    reqs = [fleet.TransferRequest(arrival_s=0.0, datasets=ONE,
+                                  controller="eemt", profile=CHAMELEON,
+                                  host=i, name=f"h{i}", total_s=600.0)
+            for i in range(2)]
+    rep = fleet.run_fleet(reqs, hosts, wave_s=5.0, dt=0.1)
+    assert all(t.completed for t in rep.transfers)

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.ckpt import available_steps, restore_latest, save
+from repro.ckpt import restore_latest, save
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data import SyntheticSource, batches
 from repro.distributed import collectives
@@ -17,7 +17,7 @@ from repro.distributed.sharding import (param_specs, shard_map,
                                         spec_for)
 from repro.models import build
 from repro.optim import AdamWConfig
-from repro.train import init_train_state, make_train_step
+from repro.train import init_train_state
 from repro.train.trainer import TrainerConfig, train
 
 

@@ -125,7 +125,6 @@ def test_rglru_matches_model_rg_lru():
     """Kernel recurrence == models.rglru.rg_lru's associative scan core."""
     from repro.models.rglru import rg_lru, init_recurrent_block
     from repro.models.common import ModelConfig
-    import dataclasses
     cfg = ModelConfig(name="t", family="hybrid", num_layers=1, d_model=64,
                       num_heads=4, num_kv_heads=1, d_ff=128, vocab_size=64,
                       lru_width=64)
@@ -166,7 +165,9 @@ def test_flash_attention_backward(B, T, H, Hkv, causal, window):
 
     def ref_fn(q, k, v):
         from repro.kernels.flash_attention.ref import attention_ref
-        tr = lambda a: a.transpose(0, 2, 1, 3)
+
+        def tr(a):
+            return a.transpose(0, 2, 1, 3)
         return tr(attention_ref(tr(q), tr(k), tr(v), causal=causal,
                                 window=window))
 

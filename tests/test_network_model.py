@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import heuristics, network_model as nm
 from repro.core.types import (CHAMELEON, CpuProfile, DatasetSpec, MIXED,
-                              NetworkProfile, SLA, SLAPolicy)
+                              SLA, SLAPolicy)
 
 CPU = CpuProfile()
 

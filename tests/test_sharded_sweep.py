@@ -62,6 +62,18 @@ def test_pad_batch_pads_by_repeating_last_row():
     np.testing.assert_array_equal(same["a"], tree["a"])
 
 
+def test_pad_batch_zero_fill_appends_drained_rows():
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(3, 2),
+            "b": np.asarray([1, 2, 3], np.int32)}
+    padded, b = shd.pad_batch(tree, 4, fill="zero")
+    assert b == 3
+    np.testing.assert_array_equal(padded["a"][3], np.zeros(2, np.float32))
+    assert padded["b"][3] == 0
+    assert padded["b"].dtype == np.int32       # dtype preserved
+    with pytest.raises(ValueError):
+        shd.pad_batch(tree, 4, fill="mirror")
+
+
 def test_pad_batch_rejects_ragged_pytrees():
     with pytest.raises(ValueError):
         shd.pad_batch({"a": np.zeros((3, 2)), "b": np.zeros((2,))}, 4)

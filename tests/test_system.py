@@ -3,11 +3,19 @@
 import numpy as np
 import pytest
 
-from repro.core import (CHAMELEON, CLOUDLAB, MIXED, SLA, SLAPolicy,
-                        CpuProfile, simulate)
+from repro import api
+from repro.core import CHAMELEON, CLOUDLAB, MIXED, SLA, SLAPolicy, CpuProfile
 from repro.core.baselines import BASELINE_BUILDERS
 
 CPU = CpuProfile()
+
+
+def _run(profile, controller, *, total_s, scaling=True, bw_schedule=None,
+         dt=0.1):
+    return api.run(api.Scenario(
+        profile=profile, datasets=MIXED,
+        controller=api.as_controller(controller, scaling=scaling),
+        cpu=CPU, total_s=total_s, dt=dt, bw_schedule=bw_schedule))
 
 
 @pytest.fixture(scope="module")
@@ -15,14 +23,11 @@ def results():
     out = {}
     for pol, key in ((SLAPolicy.MIN_ENERGY, "ME"),
                      (SLAPolicy.MAX_THROUGHPUT, "EEMT")):
-        out[key] = simulate(CHAMELEON, CPU, MIXED, SLA(policy=pol, max_ch=64),
-                            total_s=1800)
-        out[key + "-noscale"] = simulate(
-            CHAMELEON, CPU, MIXED, SLA(policy=pol, max_ch=64),
-            total_s=1800, scaling=False)
-    for name, b in BASELINE_BUILDERS.items():
-        out[name] = simulate(CHAMELEON, CPU, MIXED,
-                             b(MIXED, CHAMELEON, CPU), total_s=7200)
+        out[key] = _run(CHAMELEON, SLA(policy=pol, max_ch=64), total_s=1800)
+        out[key + "-noscale"] = _run(CHAMELEON, SLA(policy=pol, max_ch=64),
+                                     total_s=1800, scaling=False)
+    for name in BASELINE_BUILDERS:
+        out[name] = _run(CHAMELEON, name, total_s=7200)
     return out
 
 
@@ -64,9 +69,9 @@ def test_eett_tracks_targets():
     """Paper: EETT within 5-10% of target (we allow 20% in the simulator)."""
     for frac in (0.6, 0.4, 0.2):
         tgt = CHAMELEON.bandwidth_mbps * frac
-        r = simulate(CHAMELEON, CPU, MIXED,
-                     SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
-                         target_tput_mbps=tgt, max_ch=64), total_s=2400)
+        r = _run(CHAMELEON,
+                 SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
+                     target_tput_mbps=tgt, max_ch=64), total_s=2400)
         assert r.completed
         assert abs(r.avg_tput_MBps - tgt) / tgt < 0.20, \
             f"target {tgt}: got {r.avg_tput_MBps}"
@@ -76,22 +81,18 @@ def test_eett_uses_less_power_than_max_throughput_baseline():
     """Paper §V-B: EETT at modest targets draws less power than running
     the static max-throughput baseline flat out."""
     tgt = CHAMELEON.bandwidth_mbps * 0.2
-    r = simulate(CHAMELEON, CPU, MIXED,
-                 SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
-                     target_tput_mbps=tgt, max_ch=64), total_s=2400)
-    b = simulate(CHAMELEON, CPU, MIXED,
-                 BASELINE_BUILDERS["ismail-max-tput"](MIXED, CHAMELEON, CPU),
-                 total_s=7200)
+    r = _run(CHAMELEON,
+             SLA(policy=SLAPolicy.TARGET_THROUGHPUT,
+                 target_tput_mbps=tgt, max_ch=64), total_s=2400)
+    b = _run(CHAMELEON, "ismail-max-tput", total_s=7200)
     assert r.avg_power_w < b.avg_power_w
 
 
 def test_cloudlab_low_bandwidth_testbed():
     """The 1 Gbps testbeds still complete and ME saves energy."""
-    me = simulate(CLOUDLAB, CPU, MIXED,
-                  SLA(policy=SLAPolicy.MIN_ENERGY, max_ch=64), total_s=3600)
-    im = simulate(CLOUDLAB, CPU, MIXED,
-                  BASELINE_BUILDERS["ismail-min-energy"](MIXED, CLOUDLAB, CPU),
-                  total_s=14400)
+    me = _run(CLOUDLAB, SLA(policy=SLAPolicy.MIN_ENERGY, max_ch=64),
+              total_s=3600)
+    im = _run(CLOUDLAB, "ismail-min-energy", total_s=14400)
     assert me.completed and im.completed
     assert me.energy_j < im.energy_j
 
@@ -102,7 +103,6 @@ def test_bandwidth_drop_triggers_recovery():
     n_steps = int(1800 / 0.1)
     bw = np.ones(n_steps, np.float32)
     bw[3000:9000] = 0.3               # 10 minutes of 70% cross traffic
-    r = simulate(CHAMELEON, CPU, MIXED,
-                 SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64),
-                 total_s=1800, bw_schedule=bw)
+    r = _run(CHAMELEON, SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64),
+             total_s=1800, bw_schedule=bw)
     assert r.completed

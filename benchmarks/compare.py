@@ -33,13 +33,20 @@ def _direction(name: str) -> str:
                      f"use a *_s or *_per_sec suffix")
 
 
-def _load(path: str) -> tuple[dict, bool]:
+def _load(path: str) -> dict:
     with open(path) as f:
         record = json.load(f)
     metrics = record.get("metrics")
     if not isinstance(metrics, dict) or not metrics:
         raise SystemExit(f"{path}: no metrics section")
-    return metrics, bool(record.get("meta", {}).get("provisional"))
+    if record.get("meta", {}).get("provisional"):
+        # The soft-fail escape hatch is gone: a baseline either gates or it
+        # has no business being committed.  Re-capture from a bench-smoke
+        # artifact instead of resurrecting the flag.
+        raise SystemExit(f"{path}: marked meta.provisional — provisional "
+                         f"baselines are no longer supported; re-baseline "
+                         f"from a CI bench-smoke artifact")
+    return metrics
 
 
 def compare(baseline: dict, current: dict, tolerance_pct: float) -> list:
@@ -79,23 +86,10 @@ def main() -> None:
     ap.add_argument("--tolerance", type=float, default=25.0,
                     help="allowed regression, percent (default 25)")
     args = ap.parse_args()
-    baseline, provisional = _load(args.baseline)
-    current, _ = _load(args.current)
+    baseline = _load(args.baseline)
+    current = _load(args.current)
     failures = compare(baseline, current, args.tolerance)
     if failures:
-        if provisional:
-            # A baseline captured off the CI runner class cannot gate CI
-            # hard: absolute wall-clock differs across hardware far more
-            # than the tolerance.  Report, but exit 0 until a baseline
-            # measured on the target runner class is committed (drop
-            # meta.provisional when re-baselining from the CI artifact).
-            print("\nperf gate PROVISIONAL baseline — would have FAILED:",
-                  file=sys.stderr)
-            for f in failures:
-                print(f"  {f}", file=sys.stderr)
-            print("re-baseline from the uploaded BENCH_ci.json to arm the "
-                  "gate", file=sys.stderr)
-            return
         print("\nperf gate FAILED:", file=sys.stderr)
         for f in failures:
             print(f"  {f}", file=sys.stderr)

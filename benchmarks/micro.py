@@ -37,7 +37,8 @@ def bench_engine(rows=None):
     ci = ctrl.init(MIXED, CHAMELEON, CPU)
     inp = jax.tree.map(np.asarray,
                        engine.ScanInputs.from_init(ci, CHAMELEON, n_steps))
-    runner = engine.get_runner(ctrl.code(), CPU, n_steps, 0.1, 10,
+    runner = engine.get_runner(ctrl.code(), api.as_environment(None).code(),
+                               CPU, n_steps, 0.1, 10,
                                batched=False, early_exit=False)
     jax.block_until_ready(runner(inp))                        # warm
     t0 = time.perf_counter()
@@ -60,7 +61,8 @@ def bench_vmap_sweep(rows=None):
     base = engine.ScanInputs.from_init(ci, CHAMELEON, n_steps)
     # Full-horizon reference: every lane really executes n_steps ticks, so
     # the sim_steps_per_s metric divides by the work actually done.
-    core = engine.build_core(ctrl.code(), CPU, n_steps=n_steps, dt=0.1,
+    core = engine.build_core(ctrl.code(), api.as_environment(None).code(),
+                             CPU, n_steps=n_steps, dt=0.1,
                              ctrl_every=10, early_exit=False)
 
     def one(num_ch0):

@@ -10,8 +10,13 @@ One engine substrate, many controllers, compared apples-to-apples:
 
 Controllers are addressed by registry name (``api.list_controllers()``) or
 constructed directly; anything implementing the :class:`Controller` protocol
-plugs into the same engine.  ``api.sweep([...])`` groups shape-compatible
-scenarios and executes each group as one ``jax.vmap``-over-``lax.scan`` XLA
+plugs into the same engine.  The physics a controller runs against is
+pluggable the same way: an :class:`Environment` pairs a
+:class:`NetworkModel` with an :class:`EnergyModel`, both addressed by
+registry name (``api.list_environments()``, ``api.list_network_models()``,
+``api.list_energy_models()``) or constructed directly.  ``api.sweep([...])``
+groups shape-compatible scenarios — same controller code AND environment
+code — and executes each group as one ``jax.vmap``-over-``lax.scan`` XLA
 launch instead of N sequential jit calls.
 """
 from repro.core.engine import TransferResult  # noqa: F401
@@ -20,6 +25,14 @@ from .controllers import (Controller, ControllerInit,  # noqa: F401
                           IsmailTargetController, StaticBaselineController,
                           TunerController, as_controller, list_controllers,
                           make_controller, register_controller)
+from .environments import (BigLittleEnergyModel, EnergyModel,  # noqa: F401
+                           Environment, LossyWanNetworkModel, NetworkModel,
+                           ReferenceEnergyModel, ReferenceNetworkModel,
+                           as_environment, list_energy_models,
+                           list_environments, list_network_models,
+                           make_energy_model, make_environment,
+                           make_network_model, register_energy_model,
+                           register_environment, register_network_model)
 from .scenario import Scenario, group_count, run, sweep  # noqa: F401
 
 # Fleet-scale entry points.  repro.fleet builds ON TOP of the Scenario /
@@ -38,10 +51,15 @@ def __getattr__(name):
 
 
 __all__ = [
-    "Controller", "ControllerInit", "FleetReport", "Host",
-    "IsmailTargetController", "Scenario", "StaticBaselineController",
+    "BigLittleEnergyModel", "Controller", "ControllerInit", "EnergyModel",
+    "Environment", "FleetReport", "Host", "IsmailTargetController",
+    "LossyWanNetworkModel", "NetworkModel", "ReferenceEnergyModel",
+    "ReferenceNetworkModel", "Scenario", "StaticBaselineController",
     "TransferRequest", "TransferResult", "TunerController", "as_controller",
-    "group_count", "host_pool", "list_controllers", "make_controller",
-    "poisson_trace", "register_controller", "replay_trace", "run",
-    "run_fleet", "sweep",
+    "as_environment", "group_count", "host_pool", "list_controllers",
+    "list_energy_models", "list_environments", "list_network_models",
+    "make_controller", "make_energy_model", "make_environment",
+    "make_network_model", "poisson_trace", "register_controller",
+    "register_energy_model", "register_environment",
+    "register_network_model", "replay_trace", "run", "run_fleet", "sweep",
 ]

@@ -49,6 +49,8 @@ from repro.core.types import (CpuProfile, NetworkProfile, SLA, SLAParams,
                               SLAPolicy, SimState, TransferParams,
                               TunerState)
 
+from ._registry import make_from, register_in
+
 
 class ControllerInit(NamedTuple):
     """Host-side output of ``Controller.init``.
@@ -263,10 +265,7 @@ _REGISTRY: dict[str, Callable[..., Controller]] = {}
 def register_controller(name: str, factory: Callable[..., Controller],
                         *, overwrite: bool = False) -> None:
     """Register a controller factory under ``name`` (case-insensitive)."""
-    key = name.lower()
-    if key in _REGISTRY and not overwrite:
-        raise ValueError(f"controller {name!r} already registered")
-    _REGISTRY[key] = factory
+    register_in(_REGISTRY, "controller", name, factory, overwrite)
 
 
 def list_controllers() -> tuple[str, ...]:
@@ -280,12 +279,7 @@ def make_controller(name: str, **kwargs) -> Controller:
     (``alpha``, ``beta``, ``delta_ch``, ``max_ch``, ``timeout_s``,
     ``target_tput_mbps``, ...) plus ``scaling=`` and ``label=``.
     """
-    try:
-        factory = _REGISTRY[name.lower()]
-    except KeyError:
-        raise KeyError(f"unknown controller {name!r}; "
-                       f"known: {list_controllers()}") from None
-    return factory(**kwargs)
+    return make_from(_REGISTRY, "controller", list_controllers, name, kwargs)
 
 
 def _tuner_factory(policy: SLAPolicy):

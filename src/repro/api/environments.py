@@ -1,0 +1,419 @@
+"""The Environment protocol: pluggable physics for the transfer engine.
+
+The Controller protocol (``repro.api.controllers``) made the paper's
+*algorithms* pluggable; this module does the same for the *environment*
+they run against.  An :class:`Environment` bundles two protocol objects:
+
+  * :class:`NetworkModel` — the per-tick WAN simulator.  ``step`` advances
+    one tick (it receives the active :class:`EnergyModel` so CPU capacity /
+    power always come from the environment's energy physics, never from a
+    hardcoded import); ``init_state`` builds the tick-0 :class:`SimState`.
+  * :class:`EnergyModel` — the host power model.  ``operating_point`` /
+    ``cpu_capacity_mbps`` / ``cpu_load`` map an integer operating point to
+    achievable throughput, and ``power_w`` is the instantaneous package
+    draw the engine integrates into ``energy_j``.
+
+All hooks are pure and jit/vmap-safe: one scenario is still a single
+``lax.scan``, and a grid of scenarios sharing one environment code path is
+one ``vmap``-over-scan launch.  ``code()`` mirrors ``Controller.code()``:
+it returns the hashable instance that selects *compiled code* — the engine
+caches one executable per (controller code, environment code, cpu, shape)
+group, and ``repro.api.sweep`` / ``repro.fleet.run_fleet`` group lanes by
+it.  Unlike controller SLA numerics (traced, so a whole hyper-parameter
+grid shares one executable), environment knobs are static: two loss rates
+compile two executables.  That is deliberate — environments describe the
+*testbed*, and a sweep rarely mixes more than a handful.
+
+String registries parallel ``make_controller``::
+
+    make_network_model("lossy-wan", loss_rate=1e-3)
+    make_energy_model("big-little", n_big=2)
+    make_environment("reference")
+    list_network_models(), list_energy_models(), list_environments()
+
+Built-in variants:
+
+  * ``reference`` — the paper's calibrated models (``repro.core``
+    ``network_model`` / ``energy_model``), bit-identical to the
+    pre-protocol engine (regression-tested in tests/test_environments.py);
+  * ``lossy-wan`` — a lossy wide-area path: a deterministic Mathis-style
+    loss-rate cap on the per-channel TCP window, a sharper over-concurrency
+    knee, and a stochastic-free sinusoidal RTT jitter schedule;
+  * ``big-little`` — an asymmetric (big.LITTLE-style) host CPU: cores
+    beyond the big-cluster size are efficiency cores with a fraction of
+    the throughput and dynamic power of a big core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.core import energy_model, network_model
+from repro.core.types import CpuProfile, SimState
+
+from ._registry import make_from, register_in
+
+
+@runtime_checkable
+class EnergyModel(Protocol):
+    """Host power physics: operating point -> capacity, load, and watts."""
+
+    name: str
+
+    def code(self) -> "EnergyModel":
+        """Hashable instance selecting compiled code (the group key)."""
+        ...
+
+    def operating_point(self, cpu: CpuProfile, cores, freq_idx):
+        """(cores, f_GHz) from an integer operating point."""
+        ...
+
+    def cpu_capacity_mbps(self, cpu: CpuProfile, cores, freq_ghz, num_ch):
+        """Max throughput (MB/s) the CPU can push at this operating point."""
+        ...
+
+    def cpu_load(self, cpu: CpuProfile, tput_mbps, cores, freq_ghz, num_ch):
+        """Fraction of available CPU consumed by the transfer, in [0, 1]."""
+        ...
+
+    def power_w(self, cpu: CpuProfile, cores, freq_ghz, util, tput_mbps):
+        """Instantaneous package power draw (W)."""
+        ...
+
+
+@runtime_checkable
+class NetworkModel(Protocol):
+    """Per-tick WAN physics: (state, params) -> (state', observables)."""
+
+    name: str
+
+    def code(self) -> "NetworkModel":
+        """Hashable instance selecting compiled code (the group key)."""
+        ...
+
+    def init_state(self, total_mb, net) -> SimState:
+        """Tick-0 simulation state (jit-safe; also called host-side)."""
+        ...
+
+    def step(self, energy: EnergyModel, net, cpu: CpuProfile,
+             state: SimState, params, avg_file_mb, dt, bw_scale):
+        """Advance one tick.  ``energy`` is the environment's EnergyModel —
+        all CPU capacity/power must come from it.  Returns (state', NetOut).
+        """
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceEnergyModel:
+    """The paper's RAPL-calibrated model (``repro.core.energy_model``)."""
+
+    name = "reference"
+
+    def code(self) -> "ReferenceEnergyModel":
+        return self
+
+    def operating_point(self, cpu, cores, freq_idx):
+        return energy_model.operating_point(cpu, cores, freq_idx)
+
+    def cpu_capacity_mbps(self, cpu, cores, freq_ghz, num_ch):
+        return energy_model.cpu_capacity_mbps(cpu, cores, freq_ghz, num_ch)
+
+    def cpu_load(self, cpu, tput_mbps, cores, freq_ghz, num_ch):
+        return energy_model.cpu_load(cpu, tput_mbps, cores, freq_ghz, num_ch)
+
+    def power_w(self, cpu, cores, freq_ghz, util, tput_mbps):
+        return energy_model.power_w(cpu, cores, freq_ghz, util, tput_mbps)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceNetworkModel:
+    """The paper's deterministic WAN simulator
+    (``repro.core.network_model``)."""
+
+    name = "reference"
+
+    def code(self) -> "ReferenceNetworkModel":
+        return self
+
+    def init_state(self, total_mb, net) -> SimState:
+        return network_model.init_state(total_mb, net)
+
+    def step(self, energy, net, cpu, state, params, avg_file_mb, dt,
+             bw_scale):
+        return network_model.step(net, cpu, state, params, avg_file_mb, dt,
+                                  bw_scale, energy=energy)
+
+
+# Mathis et al.: steady-state TCP throughput <= C * MSS / (RTT * sqrt(p)).
+# Expressed as a cap on the effective congestion window so it composes with
+# the reference model's window ramp: w_loss = C * MSS / sqrt(p).
+_MATHIS_C = 1.22
+_MSS_MB = 1500.0 / (1024.0 * 1024.0)
+_KNEE_GAIN = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LossyWanNetworkModel:
+    """A lossy wide-area path, still fully deterministic.
+
+    Three effects on top of the reference model, all expressed as a
+    transformation of the traced :class:`~repro.core.types.NetParams`
+    before delegating to the reference step (so the two models share one
+    physics implementation):
+
+    * **Loss-rate window cap** — the steady-state TCP window cannot exceed
+      the Mathis limit ``1.22 * MSS / sqrt(loss_rate)``; per-channel rate
+      saturates at ``w_loss / RTT`` no matter how large the configured
+      window is (the knee that makes parallelism/concurrency pay on lossy
+      paths).
+    * **Sharper over-concurrency knee** — loss feedback compounds with
+      congestion: the saturation channel count shrinks by
+      ``1 / (1 + 4 * sqrt(loss_rate))``.
+    * **RTT jitter schedule** — a sinusoidal, stochastic-free delay
+      schedule: ``rtt * (1 + jitter_frac * sin(2 pi t / period))``.  Being
+      a pure function of simulated time it is reproducible bit-for-bit and
+      keeps the scan free of RNG state.
+    """
+
+    name = "lossy-wan"
+    loss_rate: float = 1e-4        # steady packet-loss probability
+    jitter_frac: float = 0.1       # peak RTT deviation (fraction)
+    jitter_period_s: float = 60.0  # jitter oscillation period
+
+    def __post_init__(self):
+        if self.loss_rate < 0.0:
+            raise ValueError(f"loss_rate must be >= 0, got {self.loss_rate}")
+        if not 0.0 <= self.jitter_frac < 1.0:
+            raise ValueError(f"jitter_frac must be in [0, 1), got "
+                             f"{self.jitter_frac}")
+        if self.jitter_period_s <= 0.0:
+            raise ValueError(f"jitter_period_s must be positive, got "
+                             f"{self.jitter_period_s}")
+
+    def code(self) -> "LossyWanNetworkModel":
+        return self
+
+    def init_state(self, total_mb, net) -> SimState:
+        return network_model.init_state(total_mb, net)
+
+    def step(self, energy, net, cpu, state, params, avg_file_mb, dt,
+             bw_scale):
+        rtt = net.rtt_s
+        if self.jitter_frac > 0.0:
+            phase = 2.0 * math.pi / self.jitter_period_s * state.t
+            rtt = rtt * (1.0 + self.jitter_frac * jnp.sin(phase))
+        window = net.avg_window_mb
+        knee = net.loss_knee
+        if self.loss_rate > 0.0:
+            w_loss = _MATHIS_C * _MSS_MB / math.sqrt(self.loss_rate)
+            window = jnp.minimum(window, w_loss)
+            knee = knee / (1.0 + _KNEE_GAIN * math.sqrt(self.loss_rate))
+        net = net._replace(rtt_s=rtt, avg_window_mb=window, loss_knee=knee)
+        return network_model.step(net, cpu, state, params, avg_file_mb, dt,
+                                  bw_scale, energy=energy)
+
+
+@dataclasses.dataclass(frozen=True)
+class BigLittleEnergyModel:
+    """Asymmetric-core (big.LITTLE-style) host CPU.
+
+    The first ``n_big`` awake cores are big cores with the reference
+    per-core throughput and power; cores beyond that are efficiency cores
+    delivering ``little_perf`` of a big core's throughput at
+    ``little_dyn_frac`` of its dynamic and ``little_static_frac`` of its
+    static power.  With ``n_big >= cpu.num_cores`` the model degenerates to
+    the reference exactly (property-tested), so the reference is the
+    all-big special case.
+
+    The frequency ladder is shared (cluster DVFS): ``operating_point`` is
+    the reference mapping, and the paper's load control explores the same
+    (cores, freq) lattice — what changes is the energy/throughput surface
+    over it, which is exactly what GreenDataFlow-style heterogeneous end
+    systems perturb.
+    """
+
+    name = "big-little"
+    n_big: int = 4
+    little_perf: float = 0.45        # little-core throughput / big-core
+    little_dyn_frac: float = 0.25    # little-core dynamic power / big-core
+    little_static_frac: float = 0.5  # little-core leakage / big-core
+
+    def __post_init__(self):
+        if self.n_big < 1:
+            raise ValueError(f"n_big must be >= 1, got {self.n_big}")
+        for f in ("little_perf", "little_dyn_frac", "little_static_frac"):
+            v = getattr(self, f)
+            if not 0.0 < v <= 1.0:
+                raise ValueError(f"{f} must be in (0, 1], got {v}")
+
+    def code(self) -> "BigLittleEnergyModel":
+        return self
+
+    def _core_mix(self, cores):
+        c = jnp.asarray(cores).astype(jnp.float32)
+        big = jnp.minimum(c, float(self.n_big))
+        little = jnp.maximum(c - float(self.n_big), 0.0)
+        return big, little
+
+    def operating_point(self, cpu, cores, freq_idx):
+        return energy_model.operating_point(cpu, cores, freq_idx)
+
+    def cpu_capacity_mbps(self, cpu, cores, freq_ghz, num_ch):
+        big, little = self._core_mix(cores)
+        core_eff = big + little * self.little_perf
+        cpb = cpu.cycles_per_byte + cpu.cycles_per_byte_per_ch * num_ch
+        return core_eff * freq_ghz * 1e9 * cpu.ipc / (cpb * 1e6)
+
+    def cpu_load(self, cpu, tput_mbps, cores, freq_ghz, num_ch):
+        cap = self.cpu_capacity_mbps(cpu, cores, freq_ghz, num_ch)
+        return jnp.clip(tput_mbps / jnp.maximum(cap, 1e-6), 0.0, 1.0)
+
+    def power_w(self, cpu, cores, freq_ghz, util, tput_mbps):
+        big, little = self._core_mix(cores)
+        u = jnp.clip(util, 0.0, 1.0)
+        dyn = ((big + little * self.little_dyn_frac)
+               * cpu.core_dyn_w_per_ghz3 * freq_ghz**3 * u)
+        static = (cpu.pkg_static_w
+                  + (big + little * self.little_static_frac)
+                  * cpu.core_static_w)
+        mem = cpu.mem_w_per_mbps * tput_mbps
+        return static + dyn + mem
+
+
+@dataclasses.dataclass(frozen=True)
+class Environment:
+    """One testbed physics: a NetworkModel + an EnergyModel, frozen.
+
+    Hashable (both members are frozen dataclasses), so it slots directly
+    into the engine's runner caches and the sweep/fleet group keys.
+    """
+
+    network: Any = ReferenceNetworkModel()
+    energy: Any = ReferenceEnergyModel()
+
+    @property
+    def name(self) -> str:
+        if self.network.name == self.energy.name:
+            return self.network.name
+        return f"{self.network.name}+{self.energy.name}"
+
+    def code(self) -> "Environment":
+        return Environment(network=self.network.code(),
+                           energy=self.energy.code())
+
+
+REFERENCE_ENV = Environment()
+
+
+# -------------------------------------------------------------- registries --
+
+_NETWORK_REGISTRY: dict[str, Callable[..., NetworkModel]] = {}
+_ENERGY_REGISTRY: dict[str, Callable[..., EnergyModel]] = {}
+_ENV_REGISTRY: dict[str, Callable[..., Environment]] = {}
+
+
+def register_network_model(name: str, factory: Callable[..., NetworkModel],
+                           *, overwrite: bool = False) -> None:
+    """Register a network-model factory under ``name`` (case-insensitive)."""
+    register_in(_NETWORK_REGISTRY, "network model", name, factory, overwrite)
+
+
+def list_network_models() -> tuple[str, ...]:
+    return tuple(sorted(_NETWORK_REGISTRY))
+
+
+def make_network_model(name: str, **kwargs) -> NetworkModel:
+    """Build a network model by registry name; kwargs reach the factory."""
+    return make_from(_NETWORK_REGISTRY, "network model", list_network_models,
+                     name, kwargs)
+
+
+def register_energy_model(name: str, factory: Callable[..., EnergyModel],
+                          *, overwrite: bool = False) -> None:
+    """Register an energy-model factory under ``name`` (case-insensitive)."""
+    register_in(_ENERGY_REGISTRY, "energy model", name, factory, overwrite)
+
+
+def list_energy_models() -> tuple[str, ...]:
+    return tuple(sorted(_ENERGY_REGISTRY))
+
+
+def make_energy_model(name: str, **kwargs) -> EnergyModel:
+    """Build an energy model by registry name; kwargs reach the factory."""
+    return make_from(_ENERGY_REGISTRY, "energy model", list_energy_models,
+                     name, kwargs)
+
+
+def register_environment(name: str, factory: Callable[..., Environment],
+                         *, overwrite: bool = False) -> None:
+    """Register an environment factory under ``name`` (case-insensitive)."""
+    register_in(_ENV_REGISTRY, "environment", name, factory, overwrite)
+
+
+def list_environments() -> tuple[str, ...]:
+    return tuple(sorted(_ENV_REGISTRY))
+
+
+def make_environment(name: str, **kwargs) -> Environment:
+    """Build an environment by registry name.
+
+    Kwargs are forwarded to the model the name parameterizes (the lossy-WAN
+    knobs for ``"lossy-wan"``, the asymmetric-core knobs for
+    ``"big-little"``); ``"reference"`` accepts none.
+    """
+    return make_from(_ENV_REGISTRY, "environment", list_environments,
+                     name, kwargs)
+
+
+def _no_kwargs(kind: str, build):
+    def factory(**kwargs):
+        if kwargs:
+            raise TypeError(f"{kind} accepts no parameters, got "
+                            f"{sorted(kwargs)}")
+        return build()
+    return factory
+
+
+register_network_model(
+    "reference", _no_kwargs("network model 'reference'",
+                            ReferenceNetworkModel))
+register_network_model("lossy-wan",
+                       lambda **kw: LossyWanNetworkModel(**kw))
+register_energy_model(
+    "reference", _no_kwargs("energy model 'reference'",
+                            ReferenceEnergyModel))
+register_energy_model("big-little",
+                      lambda **kw: BigLittleEnergyModel(**kw))
+register_environment(
+    "reference", _no_kwargs("environment 'reference'", Environment))
+register_environment(
+    "lossy-wan",
+    lambda **kw: Environment(network=LossyWanNetworkModel(**kw)))
+register_environment(
+    "big-little",
+    lambda **kw: Environment(energy=BigLittleEnergyModel(**kw)))
+
+
+def as_environment(obj=None) -> Environment:
+    """Coerce any accepted environment spelling into an Environment.
+
+    Accepts ``None`` (the reference environment), an :class:`Environment`,
+    a registry name, a bare :class:`NetworkModel` (paired with the
+    reference energy model), or a bare :class:`EnergyModel` (paired with
+    the reference network model).
+    """
+    if obj is None:
+        return REFERENCE_ENV
+    if isinstance(obj, Environment):
+        return obj
+    if isinstance(obj, str):
+        return make_environment(obj)
+    if isinstance(obj, NetworkModel):
+        return Environment(network=obj)
+    if isinstance(obj, EnergyModel):
+        return Environment(energy=obj)
+    raise TypeError(f"cannot interpret {type(obj).__name__} as an "
+                    f"Environment")

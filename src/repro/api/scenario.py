@@ -1,8 +1,9 @@
 """Scenario: one declarative transfer experiment; run one, or sweep a grid.
 
 ``sweep`` is the headline: it groups scenarios whose compiled code is
-identical (same controller code path, CPU model, step count, tick stride and
-partition count), stacks each group's numeric inputs, and executes the group
+identical (same controller code path, environment code, CPU model, step
+count, tick stride and partition count), stacks each group's numeric
+inputs, and executes the group
 as ONE vmapped XLA launch of the early-exiting engine.  A 72-cell figure
 grid becomes a handful of compiled executables instead of 72 sequential jit
 calls — and each executable stops scanning as soon as every lane of its
@@ -29,7 +30,7 @@ from repro.core.engine import ScanInputs, TransferResult
 from repro.core.types import CpuProfile, NetworkProfile
 
 from .controllers import Controller, as_controller
-
+from .environments import Environment, as_environment
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -38,7 +39,10 @@ class Scenario:
 
     ``controller`` accepts anything :func:`as_controller` does — a Controller
     instance, a registry name ("eemt", "wget/curl", ...), or a legacy SLA /
-    StaticController object.
+    StaticController object.  ``environment`` accepts anything
+    :func:`as_environment` does — ``None`` (the reference physics), an
+    Environment, a registry name ("lossy-wan", "big-little", ...), or a bare
+    NetworkModel / EnergyModel.
 
     ``total_s`` is a *budget*, not a cost: the engine freezes all accounting
     at the completion tick and stops simulating shortly after (chunked early
@@ -53,6 +57,7 @@ class Scenario:
     datasets: tuple
     controller: Any
     cpu: CpuProfile = CpuProfile()
+    environment: Optional[Any] = None   # None -> reference physics
     total_s: float = 3600.0
     dt: float = 0.1
     bw_schedule: Optional[Any] = None   # [n_steps] fraction of bandwidth
@@ -60,12 +65,22 @@ class Scenario:
 
     def __post_init__(self):
         object.__setattr__(self, "datasets", tuple(self.datasets))
+        # Validate here, where the mistake is made: bad values otherwise
+        # surface as NaNs or shape errors deep inside the jitted engine.
+        if not self.datasets:
+            raise ValueError("Scenario needs at least one dataset")
+        if not self.dt > 0.0:
+            raise ValueError(f"dt must be positive, got {self.dt}")
+        if self.total_s < self.dt:
+            raise ValueError(f"total_s ({self.total_s}) must cover at least "
+                             f"one tick of dt ({self.dt})")
 
 
 class _GroupKey(NamedTuple):
     """Executable-group key: everything that selects compiled code."""
 
     ctrl_code: Controller
+    env_code: Environment
     cpu: CpuProfile
     n_steps: int
     dt: float
@@ -82,11 +97,12 @@ def ctrl_stride(ctrl: Controller, dt: float) -> int:
     return max(int(round(ctrl.timeout_s / dt)), 1) if ctrl.tunes else 1
 
 
-def _group_key(ctrl: Controller, sc: Scenario, n_partitions: int) -> _GroupKey:
+def _group_key(ctrl: Controller, env: Environment, sc: Scenario,
+               n_partitions: int) -> _GroupKey:
     """Single source of truth for both ``_prepare`` (actual grouping) and
     ``group_count`` (prediction)."""
     n_steps = int(round(sc.total_s / sc.dt))
-    return _GroupKey(ctrl.code(), sc.cpu, n_steps, sc.dt,
+    return _GroupKey(ctrl.code(), env.code(), sc.cpu, n_steps, sc.dt,
                      ctrl_stride(ctrl, sc.dt), n_partitions)
 
 
@@ -100,8 +116,9 @@ class _Prepared(NamedTuple):
 
 def _prepare(sc: Scenario) -> _Prepared:
     ctrl: Controller = as_controller(sc.controller)
+    env = as_environment(sc.environment)
     ci = ctrl.init(sc.datasets, sc.profile, sc.cpu)
-    key = _group_key(ctrl, sc, len(ci.specs))
+    key = _group_key(ctrl, env, sc, len(ci.specs))
     n_steps = key.n_steps
 
     inputs = ScanInputs.from_init(ci, sc.profile, n_steps)
@@ -198,8 +215,8 @@ def _merged_partition_counts(keys) -> dict:
 def _run_prepared(prep: _Prepared) -> TransferResult:
     """Execute one prepared scenario on the unbatched cached runner."""
     k = prep.key
-    runner = engine.get_runner(k.ctrl_code, k.cpu, k.n_steps, k.dt,
-                               k.ctrl_every, batched=False)
+    runner = engine.get_runner(k.ctrl_code, k.env_code, k.cpu, k.n_steps,
+                               k.dt, k.ctrl_every, batched=False)
     sim, _, metrics = runner(prep.inputs)
     return _postprocess(sim, metrics, prep)
 
@@ -223,12 +240,13 @@ def _run_group(key: _GroupKey, stacked, batch: int, devices):
         stacked, _ = shd.pad_batch(stacked, len(devices))
         mesh = shd.batch_mesh(devices)
         runner = engine.get_sharded_runner(
-            key.ctrl_code, key.cpu, key.n_steps, key.dt, key.ctrl_every,
-            tuple(devices))
+            key.ctrl_code, key.env_code, key.cpu, key.n_steps, key.dt,
+            key.ctrl_every, tuple(devices))
         sim, _, metrics = runner(shd.shard_batch(stacked, mesh))
     else:
-        runner = engine.get_runner(key.ctrl_code, key.cpu, key.n_steps,
-                                   key.dt, key.ctrl_every, batched=True)
+        runner = engine.get_runner(key.ctrl_code, key.env_code, key.cpu,
+                                   key.n_steps, key.dt, key.ctrl_every,
+                                   batched=True)
         sim, _, metrics = runner(stacked)
     sim = jax.tree.map(lambda x: np.asarray(x)[:batch], sim)
     metrics = jax.tree.map(lambda x: np.asarray(x)[:batch], metrics)
@@ -247,11 +265,16 @@ def sweep(scenarios: Sequence[Scenario], *,
     ``devices`` selects the devices groups shard across (default: all local
     devices).  With more than one device, each group batch is padded to a
     multiple of the device count and dispatched through a ``shard_map``
-    runner with donated input buffers; on a single device the plain vmapped
-    runner is used and results are identical.
+    runner with donated input buffers; on a single device — or with an
+    explicitly empty ``devices`` sequence — the plain vmapped runner is
+    used and results are identical.
     """
     if devices is None:
         devices = jax.devices()
+    # An explicitly empty device list means "no sharding": normalize it
+    # here so the single-device fallback is a deliberate branch, not an
+    # accident of the len(devices) > 1 guard.
+    devices = tuple(devices) or None
     prepared = [_prepare(sc) for sc in scenarios]
     # Merge across dataset counts: pad each scenario to the widest partition
     # axis among the scenarios it could share an executable with.  A few
@@ -291,7 +314,9 @@ def group_count(scenarios: Sequence[Scenario]) -> int:
     maximum partition count among the scenarios they could share an
     executable with (same key modulo partition count).
     """
-    keys = [_group_key(as_controller(sc.controller), sc, len(sc.datasets))
+    keys = [_group_key(as_controller(sc.controller),
+                       as_environment(sc.environment), sc,
+                       len(sc.datasets))
             for sc in scenarios]
     merged = _merged_partition_counts(keys)
     return len({k._replace(n_partitions=merged[k]) for k in keys})

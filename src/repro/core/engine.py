@@ -1,10 +1,14 @@
 """Transfer engine: a chunked, early-exiting ``lax.scan`` per transfer.
 
-The engine is a *substrate*: it composes the network/energy simulator
-(network_model) with any object implementing the ``repro.api`` Controller
-protocol.  All controller-specific semantics — which channels each partition
-gets, what happens on a controller tick, whether frequency/core scaling is
-active — live behind that protocol; the engine only drives the clock.
+The engine is a *substrate*: it composes any ``repro.api`` Environment
+(a NetworkModel + EnergyModel pair — the physics) with any object
+implementing the ``repro.api`` Controller protocol (the algorithm).  All
+controller-specific semantics — which channels each partition gets, what
+happens on a controller tick, whether frequency/core scaling is active —
+live behind the Controller protocol; all physics — per-tick network
+behaviour, CPU capacity, power draw — behind the Environment protocol.
+The engine itself only drives the clock: it imports neither
+``network_model`` nor ``energy_model``.
 
 How simulation time works
 -------------------------
@@ -32,10 +36,11 @@ is only *simulated* until it drains:
 
 Everything numeric (testbed profile, SLA hyper-parameters, dataset sizes,
 initial operating point, bandwidth schedule) arrives as traced ``ScanInputs``
-leaves, so a whole grid of scenarios that share one controller code path runs
-as a single ``jax.vmap``-over-scan XLA launch — see ``repro.api.sweep``,
-which additionally shards large groups across devices.  Runners are built
-once per (controller code, cpu, n_steps, dt, ctrl_every) group and cached.
+leaves, so a whole grid of scenarios that share one controller + environment
+code path runs as a single ``jax.vmap``-over-scan XLA launch — see
+``repro.api.sweep``, which additionally shards large groups across devices.
+Runners are built once per (controller code, environment code, cpu, n_steps,
+dt, ctrl_every) group and cached.
 """
 from __future__ import annotations
 
@@ -48,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import network_model, tuners
+from . import tuners
 from .types import (CpuProfile, NetParams, NetworkProfile, SLA, SLAParams,
                     TickMetrics, TransferParams, TunerState)
 
@@ -147,14 +152,10 @@ def _controller_tick(controller, ts: TunerState, sim, load, net, cpu,
     return new._replace(acc_mb=z, acc_j=z, acc_s=z)
 
 
-def _op(cpu, ts):
-    from . import energy_model
-    return energy_model.operating_point(cpu, ts.cores, ts.freq_idx)
-
-
-def make_step_fn(controller, cpu: CpuProfile, inp: ScanInputs, *, dt: float,
-                 ctrl_every: int, n_steps: Optional[int] = None):
-    """Build the scan step.  ``controller`` supplies the jittable semantics;
+def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
+                 dt: float, ctrl_every: int, n_steps: Optional[int] = None):
+    """Build the scan step.  ``controller`` supplies the jittable algorithm
+    semantics, ``env`` (a ``repro.api`` Environment) the jittable physics;
     static metadata (cpu, dt, ctrl_every) is closed over.
 
     A tick is ``live`` while the transfer still has bytes remaining *and*
@@ -177,8 +178,8 @@ def make_step_fn(controller, cpu: CpuProfile, inp: ScanInputs, *, dt: float,
         params = TransferParams(pp=inp.pp, par=inp.par, cc=cc,
                                 cores=ts.cores, freq_idx=ts.freq_idx)
 
-        sim2, out = network_model.step(inp.net, cpu, sim, params,
-                                       inp.avg_file_mb, dt, bw_scale)
+        sim2, out = env.network.step(env.energy, inp.net, cpu, sim, params,
+                                     inp.avg_file_mb, dt, bw_scale)
         # Completion masking: freeze the world (energy, t, windows) once the
         # transfer has completed — the clock only runs while live.
         sim2 = jax.tree.map(lambda new, old: jnp.where(done, old, new),
@@ -199,7 +200,7 @@ def make_step_fn(controller, cpu: CpuProfile, inp: ScanInputs, *, dt: float,
             ts = jax.tree.map(lambda n, o: jnp.where(is_ctrl, n, o),
                               ts_new, ts)
 
-        _, f = _op(cpu, ts)
+        _, f = env.energy.operating_point(cpu, ts.cores, ts.freq_idx)
         zi = jnp.zeros((), jnp.int32)
         metrics = TickMetrics(
             tput_mbps=out.tput_mbps * live, power_w=out.power_w * live,
@@ -228,7 +229,7 @@ def _init_metrics_buffer(padded: int) -> TickMetrics:
     )
 
 
-def build_core(controller, cpu: CpuProfile, *, n_steps: int, dt: float,
+def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
                ctrl_every: int, early_exit: bool = True,
                chunk: Optional[int] = None):
     """One full transfer: ScanInputs -> (final SimState, TunerState, traces).
@@ -247,8 +248,8 @@ def build_core(controller, cpu: CpuProfile, *, n_steps: int, dt: float,
     padded = n_chunks * chunk
 
     def core(inp: ScanInputs):
-        sim0 = network_model.init_state(inp.total_mb, inp.net)
-        step = make_step_fn(controller, cpu, inp, dt=dt,
+        sim0 = env.network.init_state(inp.total_mb, inp.net)
+        step = make_step_fn(controller, env, cpu, inp, dt=dt,
                             ctrl_every=ctrl_every,
                             n_steps=n_steps if padded != n_steps else None)
 
@@ -286,18 +287,19 @@ def build_core(controller, cpu: CpuProfile, *, n_steps: int, dt: float,
 
 
 @functools.lru_cache(maxsize=None)
-def get_runner(controller_code, cpu: CpuProfile, n_steps: int, dt: float,
-               ctrl_every: int, batched: bool, early_exit: bool = True,
-               chunk: Optional[int] = None):
+def get_runner(controller_code, env_code, cpu: CpuProfile, n_steps: int,
+               dt: float, ctrl_every: int, batched: bool,
+               early_exit: bool = True, chunk: Optional[int] = None):
     """Jitted (and optionally vmapped) engine core, cached per code group.
 
     ``controller_code`` must be a canonical (numerics-stripped, hashable)
-    controller — see ``Controller.code()``.  Scenarios that share a cache key
+    controller — see ``Controller.code()`` — and ``env_code`` a canonical
+    environment (``Environment.code()``).  Scenarios that share a cache key
     share one compiled executable.  When vmapped, the early-exit loop stops
     once *all* lanes of the batch are done (``repro.api.sweep`` keeps groups
     shape-compatible, so lanes tend to finish at similar times).
     """
-    core = build_core(controller_code, cpu, n_steps=n_steps, dt=dt,
+    core = build_core(controller_code, env_code, cpu, n_steps=n_steps, dt=dt,
                       ctrl_every=ctrl_every, early_exit=early_exit,
                       chunk=chunk)
     if batched:
@@ -329,7 +331,7 @@ def get_runner(controller_code, cpu: CpuProfile, n_steps: int, dt: float,
 # completion tick + the frozen ``energy_j`` / ``bytes_moved``.
 
 
-def build_wave_core(controller, cpu: CpuProfile, *, wave_steps: int,
+def build_wave_core(controller, env, cpu: CpuProfile, *, wave_steps: int,
                     dt: float, ctrl_every: int):
     """One wave of one transfer: (inputs, carry, step0) -> (carry', done_at).
 
@@ -341,7 +343,7 @@ def build_wave_core(controller, cpu: CpuProfile, *, wave_steps: int,
     """
 
     def core(inp: ScanInputs, sim0, ts0, step0):
-        step = make_step_fn(controller, cpu, inp, dt=dt,
+        step = make_step_fn(controller, env, cpu, inp, dt=dt,
                             ctrl_every=ctrl_every)
 
         def wave_step(carry, xs):
@@ -361,21 +363,23 @@ def build_wave_core(controller, cpu: CpuProfile, *, wave_steps: int,
 
 
 @functools.lru_cache(maxsize=None)
-def get_wave_runner(controller_code, cpu: CpuProfile, wave_steps: int,
-                    dt: float, ctrl_every: int):
-    """Jitted, vmapped wave core, cached per controller code group.
+def get_wave_runner(controller_code, env_code, cpu: CpuProfile,
+                    wave_steps: int, dt: float, ctrl_every: int):
+    """Jitted, vmapped wave core, cached per (controller, environment) code
+    group.
 
     Lanes are independent (no early-exit barrier inside a wave), so padding
     lanes with drained transfers (zero remaining bytes) is free: they are
     frozen from tick 0.
     """
-    core = build_wave_core(controller_code, cpu, wave_steps=wave_steps,
-                           dt=dt, ctrl_every=ctrl_every)
+    core = build_wave_core(controller_code, env_code, cpu,
+                           wave_steps=wave_steps, dt=dt,
+                           ctrl_every=ctrl_every)
     return jax.jit(jax.vmap(core))
 
 
 @functools.lru_cache(maxsize=None)
-def get_sharded_wave_runner(controller_code, cpu: CpuProfile,
+def get_sharded_wave_runner(controller_code, env_code, cpu: CpuProfile,
                             wave_steps: int, dt: float, ctrl_every: int,
                             devices: tuple):
     """Wave runner sharded over ``devices`` along the lane axis.
@@ -390,8 +394,9 @@ def get_sharded_wave_runner(controller_code, cpu: CpuProfile,
     from repro.distributed import sharding as shd
 
     mesh = shd.batch_mesh(devices)
-    core = build_wave_core(controller_code, cpu, wave_steps=wave_steps,
-                           dt=dt, ctrl_every=ctrl_every)
+    core = build_wave_core(controller_code, env_code, cpu,
+                           wave_steps=wave_steps, dt=dt,
+                           ctrl_every=ctrl_every)
     f = shd.shard_map(jax.vmap(core), mesh=mesh,
                       in_specs=(P("batch"),) * 4,
                       out_specs=P("batch"), check_vma=False)
@@ -399,9 +404,10 @@ def get_sharded_wave_runner(controller_code, cpu: CpuProfile,
 
 
 @functools.lru_cache(maxsize=None)
-def get_sharded_runner(controller_code, cpu: CpuProfile, n_steps: int,
-                       dt: float, ctrl_every: int, devices: tuple,
-                       early_exit: bool = True, chunk: Optional[int] = None):
+def get_sharded_runner(controller_code, env_code, cpu: CpuProfile,
+                       n_steps: int, dt: float, ctrl_every: int,
+                       devices: tuple, early_exit: bool = True,
+                       chunk: Optional[int] = None):
     """Batched engine core sharded over ``devices`` along the batch axis.
 
     Built with ``shard_map`` over a 1-D ``batch`` mesh, so each device runs
@@ -416,7 +422,7 @@ def get_sharded_runner(controller_code, cpu: CpuProfile, n_steps: int,
     from repro.distributed import sharding as shd
 
     mesh = shd.batch_mesh(devices)
-    core = build_core(controller_code, cpu, n_steps=n_steps, dt=dt,
+    core = build_core(controller_code, env_code, cpu, n_steps=n_steps, dt=dt,
                       ctrl_every=ctrl_every, early_exit=early_exit,
                       chunk=chunk)
     f = shd.shard_map(jax.vmap(core), mesh=mesh, in_specs=(P("batch"),),

@@ -61,12 +61,19 @@ def step(
     avg_file_mb,
     dt: float,
     bw_scale,
+    energy=None,
 ):
     """Advance the transfer by ``dt`` seconds. Returns (state', NetOut).
 
     ``avg_file_mb`` is the per-partition average file (or chunk) size —
-    static dataset metadata threaded through by engine.py.
+    static dataset metadata threaded through by engine.py.  ``energy``
+    supplies the host power physics (anything implementing the
+    ``repro.api.environments.EnergyModel`` protocol); it defaults to this
+    package's reference ``energy_model`` module, whose functions have the
+    exact protocol signatures.
     """
+    if energy is None:
+        energy = energy_model
     active = (state.remaining_mb > 0.0).astype(jnp.float32)     # [P]
     cc = jnp.maximum(params.cc, 0.0) * active
     total_ch = jnp.sum(cc)
@@ -84,8 +91,8 @@ def step(
     eff = contention_efficiency(profile, total_ch, avg_win)
     net_cap = b_avail * eff
 
-    cores, f = energy_model.operating_point(cpu, params.cores, params.freq_idx)
-    cpu_cap = energy_model.cpu_capacity_mbps(cpu, cores, f, total_ch)
+    cores, f = energy.operating_point(cpu, params.cores, params.freq_idx)
+    cpu_cap = energy.cpu_capacity_mbps(cpu, cores, f, total_ch)
 
     tput = jnp.minimum(jnp.minimum(total_demand, net_cap), cpu_cap)
     scale = tput / jnp.maximum(total_demand, 1e-6)
@@ -100,8 +107,8 @@ def step(
     ramp = jnp.clip(dt / (8.0 * profile.rtt_s), 0.0, 1.0)
     window = state.window_mb + (profile.avg_window_mb - state.window_mb) * ramp
 
-    load = energy_model.cpu_load(cpu, tput, cores, f, total_ch)
-    pw = energy_model.power_w(cpu, cores, f, load, tput)
+    load = energy.cpu_load(cpu, tput, cores, f, total_ch)
+    pw = energy.power_w(cpu, cores, f, load, tput)
 
     new_state = SimState(
         remaining_mb=remaining,

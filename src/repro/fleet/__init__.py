@@ -9,9 +9,13 @@ NIC whose capacity is split among its in-flight transfers — on top of the
 
 Execution is in streaming *waves*: all active transfers advance by one wave
 window through the grouped ``jit(vmap(scan))`` engine (one launch per
-controller code group, lanes padded to shape-compatible buckets), completed
-lanes are drained and refilled from the arrival queue, and per-host NIC
-contention rescales each transfer's available bandwidth between waves.
+(controller code, environment code, cpu) group, lanes padded to
+shape-compatible buckets), completed lanes are drained and refilled from
+the arrival queue, and per-host NIC contention rescales each transfer's
+available bandwidth between waves.  Pools may be heterogeneous: every
+:class:`Host` carries its own CPU profile and its own
+``repro.api`` Environment (reference / lossy-WAN / big.LITTLE / custom),
+and each distinct physics compiles its own wave runner.
 
 Quickstart::
 

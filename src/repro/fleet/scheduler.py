@@ -13,8 +13,10 @@
    in-flight transfers exceed the NIC, every transfer on that host gets its
    available bandwidth scaled by ``nic / demand`` for the coming wave
    (``ScanInputs.bw`` carries the scalar share — the engine hook).
-3. **Run.**  Active lanes are grouped by controller code (exactly the
-   ``sweep`` grouping), partition-padded to the trace-wide maximum
+3. **Run.**  Active lanes are grouped by (controller code, environment
+   code, cpu) — exactly the ``sweep`` grouping, so a heterogeneous pool
+   (per-host environments, see ``repro.fleet.hosts``) compiles one wave
+   runner per distinct physics — partition-padded to the trace-wide maximum
    (``repro.api.scenario.pad_partition_inputs``), stacked, padded to a
    power-of-two lane bucket with drained zero lanes
    (``repro.distributed.sharding.pad_batch(fill="zero")``) to bound
@@ -43,6 +45,7 @@ import jax
 import numpy as np
 
 from repro.api.controllers import as_controller
+from repro.api.environments import as_environment
 from repro.api.scenario import ctrl_stride, pad_partition_inputs
 from repro.core import engine
 from repro.core.engine import ScanInputs
@@ -53,29 +56,16 @@ from .arrivals import TransferRequest, request_sort_key
 from .hosts import Host
 
 
-def _np_init_state(total_mb: np.ndarray) -> SimState:
-    """Host-side twin of ``network_model.init_state`` (numpy, no jax
-    dispatch per admission) — must stay bit-identical to it."""
-    total_mb = np.asarray(total_mb, np.float32)
-    p = total_mb.shape[0]
-    return SimState(
-        remaining_mb=total_mb.copy(),
-        window_mb=np.full((p,), np.float32(64.0 / 1024.0), np.float32),
-        t=np.zeros((), np.float32),
-        energy_j=np.zeros((), np.float32),
-        bytes_moved=np.zeros((), np.float32),
-    )
-
-
 class _Combo:
     """Prepared admission state for one unique
-    (controller, datasets, profile, cpu) combination."""
+    (controller, datasets, profile, cpu, environment) combination."""
 
-    __slots__ = ("inputs", "state0", "key", "ctrl_name", "n_partitions",
-                 "ideal_s")
+    __slots__ = ("inputs", "state0", "sim0", "key", "ctrl_name", "env",
+                 "n_partitions", "ideal_s")
 
     def __init__(self, req: TransferRequest, host: Host, dt: float):
         ctrl = as_controller(req.controller)
+        env = as_environment(host.environment)
         ci = ctrl.init(req.datasets, req.profile, host.cpu)
         inputs = ScanInputs.from_init(ci, req.profile, 1)
         # Scalar bandwidth share (the wave engine hook) instead of the
@@ -83,11 +73,24 @@ class _Combo:
         inputs = inputs._replace(bw=np.float32(1.0))
         self.inputs = jax.tree.map(np.asarray, inputs)
         self.state0 = jax.tree.map(np.asarray, ci.state)
-        self.key = (ctrl.code(), host.cpu, ctrl_stride(ctrl, dt))
+        self.sim0 = None               # set by finalize()
+        self.env = env
+        self.key = (ctrl.code(), env.code(), host.cpu,
+                    ctrl_stride(ctrl, dt))
         self.ctrl_name = ctrl.name
         self.n_partitions = len(ci.specs)
         total_mb = float(np.sum(self.inputs.total_mb))
         self.ideal_s = total_mb / max(req.profile.bandwidth_mbps, 1e-9)
+
+    def finalize(self, n_partitions: int) -> None:
+        """Widen to the trace-wide partition count and build the tick-0
+        state through the environment's NetworkModel (numpy leaves — one
+        jax dispatch per combo, shared by every admission of it)."""
+        self.inputs = pad_partition_inputs(self.inputs, n_partitions)
+        self.sim0 = jax.tree.map(
+            np.asarray,
+            self.env.network.init_state(self.inputs.total_mb,
+                                        self.inputs.net))
 
 
 @dataclasses.dataclass
@@ -140,7 +143,7 @@ def _run_wave_group(key, lanes: list, shares: list, wave_steps: int,
     """Advance one controller-code group of lanes by one wave, in place."""
     from repro.distributed import sharding as shd
 
-    code, cpu, ctrl_every = key
+    code, env_code, cpu, ctrl_every = key
     n = len(lanes)
     batch = (
         _stack([ln.combo.inputs._replace(bw=np.float32(s))
@@ -159,11 +162,11 @@ def _run_wave_group(key, lanes: list, shares: list, wave_steps: int,
         batch, _ = shd.pad_batch(batch, bucket, fill="zero")
         mesh = shd.batch_mesh(devices)
         runner = engine.get_sharded_wave_runner(
-            code, cpu, wave_steps, dt, ctrl_every, tuple(devices))
+            code, env_code, cpu, wave_steps, dt, ctrl_every, tuple(devices))
         sim, ts, done_at = runner(*shd.shard_batch(batch, mesh))
     else:
         batch, _ = shd.pad_batch(batch, bucket, fill="zero")
-        runner = engine.get_wave_runner(code, cpu, wave_steps, dt,
+        runner = engine.get_wave_runner(code, env_code, cpu, wave_steps, dt,
                                         ctrl_every)
         sim, ts, done_at = runner(*batch)
     sim = jax.tree.map(np.asarray, sim)
@@ -206,20 +209,24 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     # partition count makes every lane shape-compatible.  The partition
     # count is a function of the datasets alone (Algorithm-1 chunking
     # splits files *within* partitions), so p_max from the pre-pass also
-    # covers combos created later for other hosts' CPU profiles.
+    # covers combos created later for other hosts' CPU profiles or
+    # environments.
     combos: dict[tuple, _Combo] = {}
     p_max = 0
+    finalized = False
 
     def combo_for(req: TransferRequest, host: Host) -> _Combo:
         ck = (req.controller if isinstance(req.controller, str)
               else as_controller(req.controller),
-              req.datasets, req.profile, host.cpu)
+              req.datasets, req.profile, host.cpu,
+              as_environment(host.environment))
         if ck not in combos:
             c = _Combo(req, host, dt)
-            # During the pre-pass p_max is still growing; the final pad
-            # loop below widens everything once it is known.
-            if p_max >= c.n_partitions:
-                c.inputs = pad_partition_inputs(c.inputs, p_max)
+            # Combos created after the pre-pass (an unpinned request landing
+            # on a host whose (cpu, environment) no earlier combo covered)
+            # finalize immediately: p_max is already trace-wide.
+            if finalized:
+                c.finalize(p_max)
             combos[ck] = c
         return combos[ck]
 
@@ -230,7 +237,8 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
         host = hosts[req.host] if req.host is not None else hosts[0]
         p_max = max(p_max, combo_for(req, host).n_partitions)
     for c in combos.values():
-        c.inputs = pad_partition_inputs(c.inputs, p_max)
+        c.finalize(p_max)
+    finalized = True
 
     lanes: list[_Lane] = []
     waiting: list[TransferRequest] = []
@@ -281,7 +289,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             combo = combo_for(req, hosts[h])
             lanes.append(_Lane(
                 seq=seq, req=req, host_idx=h, combo=combo,
-                sim=_np_init_state(combo.inputs.total_mb),
+                sim=combo.sim0,
                 ts=combo.state0, start_s=now,
                 budget_steps=max(int(round(req.total_s / dt)), 1)))
             seq += 1

@@ -12,6 +12,7 @@ from repro.core import CpuProfile, DatasetSpec, engine
 from repro.core.types import CHAMELEON, MIXED
 
 CPU = CpuProfile()
+ENV = api.as_environment(None).code()       # reference physics
 
 FAST = (DatasetSpec("a", 200, 400.0, 2.0),
         DatasetSpec("b", 10, 600.0, 60.0))
@@ -57,9 +58,9 @@ def test_early_exit_matches_full_horizon_runner(n_steps):
     ci = ctrl.init(MIXED, CHAMELEON, CPU)
     inp = jax.tree.map(np.asarray,
                        engine.ScanInputs.from_init(ci, CHAMELEON, n_steps))
-    fast = engine.get_runner(ctrl.code(), CPU, n_steps, 0.1, 10,
+    fast = engine.get_runner(ctrl.code(), ENV, CPU, n_steps, 0.1, 10,
                              batched=False, early_exit=True)
-    full = engine.get_runner(ctrl.code(), CPU, n_steps, 0.1, 10,
+    full = engine.get_runner(ctrl.code(), ENV, CPU, n_steps, 0.1, 10,
                              batched=False, early_exit=False)
     sim_f, ts_f, m_f = jax.tree.map(np.asarray, fast(inp))
     sim_s, ts_s, m_s = jax.tree.map(np.asarray, full(inp))
@@ -80,7 +81,7 @@ def test_chunking_is_bit_identical():
                        engine.ScanInputs.from_init(ci, CHAMELEON, n_steps))
     outs = []
     for chunk in (64, 333, 1000):
-        runner = engine.get_runner(ctrl.code(), CPU, n_steps, 0.25, 4,
+        runner = engine.get_runner(ctrl.code(), ENV, CPU, n_steps, 0.25, 4,
                                    batched=False, early_exit=True,
                                    chunk=chunk)
         outs.append(jax.tree.map(np.asarray, runner(inp)))

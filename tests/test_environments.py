@@ -1,0 +1,437 @@
+"""The Environment protocol surface: registries, reference bit-identity,
+variant physics, mixed-environment sweeps, and heterogeneous fleets.
+
+The golden tables below were captured from the PR 3 engine (before physics
+dispatched through the Environment protocol) by running ``api.run`` /
+``run_fleet`` directly; the reference environment must keep reproducing
+them bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro import api, fleet
+from repro.core.types import (CHAMELEON, CLOUDLAB, CpuProfile, DatasetSpec,
+                              NetParams)
+
+CPU = CpuProfile()
+
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+ONE = (DatasetSpec("c", 50, 500.0, 10.0),)
+
+NO_CONTENTION = 1e9
+
+
+def _mk(name):
+    if name in ("eett", "ismail-target"):
+        return api.make_controller(name, target_tput_mbps=400.0)
+    return api.make_controller(name)
+
+
+def _scenario(profile, name, ds, **kw):
+    return api.Scenario(profile=profile, datasets=ds, controller=_mk(name),
+                        total_s=240.0, dt=0.1, **kw)
+
+
+# Captured from the PR 3 engine (pre-Environment-protocol), api.run with
+# total_s=240.0, dt=0.1: (completed, time_s, energy_j, avg_tput_MBps,
+# avg_power_w).
+RUN_GOLDEN = {
+    ("chameleon", "eemt", "fast"): (True, 1.2000000000000002, 31.04885482788086, 833.3333333333333, 25.87404568990071),
+    ("chameleon", "eemt", "one"): (True, 0.7000000000000001, 15.856439590454102, 714.2858014787946, 22.65205655779157),
+    ("chameleon", "me", "fast"): (True, 4.0, 47.53553771972656, 249.9999542236328, 11.88388442993164),
+    ("chameleon", "me", "one"): (True, 2.7, 28.187297821044922, 185.1851286711516, 10.439739933720341),
+    ("chameleon", "wget/curl", "fast"): (True, 10.0, 187.87521362304688, 99.99998779296875, 18.787521362304688),
+    ("chameleon", "wget/curl", "one"): (True, 8.3, 140.1924591064453, 60.24096385542168, 16.89065772366811),
+    ("chameleon", "ismail-target", "fast"): (True, 5.6000000000000005, 127.40544128417969, 178.57147216796872, 22.750971657889227),
+    ("chameleon", "ismail-target", "one"): (True, 4.1000000000000005, 82.59339141845703, 121.95125672875379, 20.14472961425781),
+    ("chameleon", "eett", "fast"): (True, 2.0, 39.50807571411133, 500.0000305175781, 19.754037857055664),
+    ("chameleon", "eett", "one"): (True, 1.4000000000000001, 25.693153381347656, 357.1429007393973, 18.352252415248323),
+    ("cloudlab", "eemt", "fast"): (True, 8.4, 99.49142456054688, 119.04756091889881, 11.844217209588914),
+    ("cloudlab", "eemt", "one"): (True, 4.3, 58.72537612915039, 116.27909815588663, 13.657064216081487),
+    ("cloudlab", "me", "fast"): (True, 11.600000000000001, 97.5721435546875, 86.20689655172413, 8.41139168574892),
+    ("cloudlab", "me", "one"): (True, 4.5, 40.65987014770508, 111.11109754774306, 9.035526699490017),
+    ("cloudlab", "wget/curl", "fast"): (True, 22.1, 357.3303527832031, 45.24885773119344, 16.16879424358385),
+    ("cloudlab", "wget/curl", "one"): (True, 20.1, 305.2291564941406, 24.87559759794776, 15.18553017383784),
+    ("cloudlab", "ismail-target", "fast"): (True, 10.8, 200.1354217529297, 92.59255303276909, 18.53105756971571),
+    ("cloudlab", "ismail-target", "one"): (True, 6.0, 108.07884979248047, 83.3333231608073, 18.013141632080078),
+    ("cloudlab", "eett", "fast"): (True, 9.200000000000001, 104.67521667480469, 108.69562563688858, 11.377740942913551),
+    ("cloudlab", "eett", "one"): (True, 4.2, 57.62987518310547, 119.04764084588913, 13.721398853120348),
+}
+_PROFILES = {"chameleon": CHAMELEON, "cloudlab": CLOUDLAB}
+_DATASETS = {"fast": FAST, "one": ONE}
+
+# Zero-contention run_fleet of ("chameleon", "eemt", "fast") on the PR 3
+# engine: (completed, time_s, energy_j, moved_mb).
+FLEET_GOLDEN = (True, 1.2000000000000002, 31.04885482788086, 1000.0)
+
+
+# ------------------------------------------------------------- registries ---
+
+def test_network_model_registry_roundtrips():
+    names = api.list_network_models()
+    assert {"reference", "lossy-wan"} <= set(names)
+    for name in names:
+        model = api.make_network_model(name)
+        assert isinstance(model, api.NetworkModel)
+        assert hash(model.code()) == hash(model.code())
+
+
+def test_energy_model_registry_roundtrips():
+    names = api.list_energy_models()
+    assert {"reference", "big-little"} <= set(names)
+    for name in names:
+        model = api.make_energy_model(name)
+        assert isinstance(model, api.EnergyModel)
+        assert hash(model.code()) == hash(model.code())
+
+
+def test_environment_registry_roundtrips():
+    names = api.list_environments()
+    assert {"reference", "lossy-wan", "big-little"} <= set(names)
+    for name in names:
+        env = api.make_environment(name)
+        assert isinstance(env, api.Environment)
+        assert isinstance(env.network, api.NetworkModel)
+        assert isinstance(env.energy, api.EnergyModel)
+        assert hash(env.code()) == hash(env.code())
+        # as_environment is idempotent on instances and resolves names to
+        # an equal environment
+        assert api.as_environment(env) is env
+        assert api.as_environment(name) == env
+
+
+def test_registry_names_are_case_insensitive_with_kwargs():
+    a = api.make_network_model("LOSSY-WAN", loss_rate=1e-3)
+    b = api.make_network_model("lossy-wan", loss_rate=1e-3)
+    assert a == b
+    assert a.loss_rate == 1e-3
+
+
+def test_unknown_names_raise():
+    with pytest.raises(KeyError):
+        api.make_network_model("not-a-network")
+    with pytest.raises(KeyError):
+        api.make_energy_model("not-an-energy")
+    with pytest.raises(KeyError):
+        api.make_environment("not-an-environment")
+
+
+def test_duplicate_registration_raises():
+    api.register_network_model("test-dup-net", api.ReferenceNetworkModel,
+                               overwrite=True)
+    with pytest.raises(ValueError):
+        api.register_network_model("test-dup-net", api.ReferenceNetworkModel)
+    api.register_energy_model("test-dup-energy", api.ReferenceEnergyModel,
+                              overwrite=True)
+    with pytest.raises(ValueError):
+        api.register_energy_model("test-dup-energy", api.ReferenceEnergyModel)
+    api.register_environment("test-dup-env", api.Environment,
+                             overwrite=True)
+    with pytest.raises(ValueError):
+        api.register_environment("test-dup-env", api.Environment)
+
+
+def test_reference_factories_reject_parameters():
+    with pytest.raises(TypeError):
+        api.make_network_model("reference", loss_rate=0.1)
+    with pytest.raises(TypeError):
+        api.make_energy_model("reference", n_big=2)
+    with pytest.raises(TypeError):
+        api.make_environment("reference", loss_rate=0.1)
+
+
+def test_as_environment_coercions():
+    ref = api.as_environment(None)
+    assert ref == api.Environment()
+    net = api.LossyWanNetworkModel()
+    env = api.as_environment(net)
+    assert env.network is net
+    assert isinstance(env.energy, api.ReferenceEnergyModel)
+    power = api.BigLittleEnergyModel()
+    env = api.as_environment(power)
+    assert env.energy is power
+    assert isinstance(env.network, api.ReferenceNetworkModel)
+    with pytest.raises(TypeError):
+        api.as_environment(42)
+
+
+def test_model_hyperparameters_are_validated():
+    with pytest.raises(ValueError):
+        api.LossyWanNetworkModel(loss_rate=-1.0)
+    with pytest.raises(ValueError):
+        api.LossyWanNetworkModel(jitter_frac=1.5)
+    with pytest.raises(ValueError):
+        api.LossyWanNetworkModel(jitter_period_s=0.0)
+    with pytest.raises(ValueError):
+        api.BigLittleEnergyModel(n_big=0)
+    with pytest.raises(ValueError):
+        api.BigLittleEnergyModel(little_perf=0.0)
+
+
+def test_environment_names():
+    assert api.Environment().name == "reference"
+    assert api.make_environment("lossy-wan").name == "lossy-wan+reference"
+    assert api.make_environment("big-little").name == "reference+big-little"
+
+
+# ------------------------------------------- reference bit-identity ---------
+
+def test_reference_environment_matches_pre_refactor_run_goldens():
+    """The protocol refactor moved dispatch, not math: api.run through the
+    reference Environment reproduces the PR 3 engine bit-for-bit."""
+    for (pn, cn, dn), want in RUN_GOLDEN.items():
+        r = api.run(_scenario(_PROFILES[pn], cn, _DATASETS[dn]))
+        got = (r.completed, r.time_s, r.energy_j, r.avg_tput_MBps,
+               r.avg_power_w)
+        assert got == want, (pn, cn, dn)
+
+
+def test_reference_environment_matches_pre_refactor_sweep_goldens():
+    cases = sorted(RUN_GOLDEN)
+    swept = api.sweep([_scenario(_PROFILES[pn], cn, _DATASETS[dn])
+                       for pn, cn, dn in cases])
+    for (pn, cn, dn), r in zip(cases, swept):
+        want = RUN_GOLDEN[(pn, cn, dn)]
+        got = (r.completed, r.time_s, r.energy_j, r.avg_tput_MBps,
+               r.avg_power_w)
+        assert got == want, (pn, cn, dn)
+
+
+def test_reference_environment_matches_pre_refactor_fleet_golden():
+    req = fleet.TransferRequest(arrival_s=0.0, datasets=FAST,
+                                controller=_mk("eemt"), profile=CHAMELEON,
+                                name="g", total_s=240.0)
+    rep = fleet.run_fleet([req], fleet.host_pool(1, nic_mbps=NO_CONTENTION),
+                          wave_s=5.0, dt=0.1)
+    t = rep.transfers[0]
+    assert (t.completed, t.time_s, t.energy_j, t.moved_mb) == FLEET_GOLDEN
+
+
+def test_explicit_reference_environment_is_the_default():
+    base = api.run(_scenario(CHAMELEON, "eemt", FAST))
+    for env in ("reference", api.Environment(),
+                api.ReferenceNetworkModel(), api.ReferenceEnergyModel()):
+        r = api.run(_scenario(CHAMELEON, "eemt", FAST, environment=env))
+        assert (r.time_s, r.energy_j) == (base.time_s, base.energy_j)
+
+
+def test_engine_has_no_hardcoded_physics():
+    """Acceptance guard: the engine dispatches all physics through the
+    Environment protocol — no direct model imports in the scan module."""
+    import inspect
+
+    from repro.core import engine
+    src = inspect.getsource(engine)
+    assert "from . import tuners" in src          # the probe is meaningful
+    assert "import network_model" not in src
+    assert "import energy_model" not in src
+
+
+# ------------------------------------------------------- variant physics ----
+
+def test_lossy_wan_is_strictly_worse_than_reference():
+    ref = api.run(_scenario(CHAMELEON, "eemt", FAST))
+    lossy = api.run(_scenario(CHAMELEON, "eemt", FAST,
+                              environment="lossy-wan"))
+    assert ref.completed and lossy.completed
+    assert lossy.time_s > ref.time_s
+    assert lossy.energy_j > ref.energy_j
+
+
+def test_lossy_wan_degenerates_to_reference_when_clean():
+    """Zero loss + zero jitter is the reference path, bit for bit."""
+    clean = api.LossyWanNetworkModel(loss_rate=0.0, jitter_frac=0.0)
+    ref = api.run(_scenario(CHAMELEON, "eemt", FAST))
+    r = api.run(_scenario(CHAMELEON, "eemt", FAST, environment=clean))
+    assert (r.time_s, r.energy_j, r.avg_power_w) == \
+        (ref.time_s, ref.energy_j, ref.avg_power_w)
+
+
+def test_lossy_wan_loss_rate_monotonicity():
+    times = []
+    for loss in (1e-5, 1e-4, 1e-3):
+        r = api.run(_scenario(
+            CHAMELEON, "eemt", FAST,
+            environment=api.LossyWanNetworkModel(loss_rate=loss,
+                                                 jitter_frac=0.0)))
+        assert r.completed
+        times.append(r.time_s)
+    assert times == sorted(times)
+
+
+def test_big_little_degenerates_to_reference_when_all_big():
+    """n_big >= num_cores means every core is big: the asymmetric model
+    must reproduce the reference bit-for-bit."""
+    all_big = api.BigLittleEnergyModel(n_big=CPU.num_cores)
+    ref = api.run(_scenario(CHAMELEON, "eemt", FAST))
+    r = api.run(_scenario(CHAMELEON, "eemt", FAST, environment=all_big))
+    assert (r.time_s, r.energy_j, r.avg_power_w) == \
+        (ref.time_s, ref.energy_j, ref.avg_power_w)
+
+
+def test_big_little_capacity_and_power_surfaces():
+    import jax.numpy as jnp
+    model = api.BigLittleEnergyModel(n_big=4)
+    ref = api.ReferenceEnergyModel()
+    cores = jnp.asarray(8, jnp.int32)
+    f = 3.0
+    # 4 big + 4 little cores push less than 8 big cores, more than 4 big
+    cap = float(model.cpu_capacity_mbps(CPU, cores, f, 8.0))
+    cap_ref = float(ref.cpu_capacity_mbps(CPU, cores, f, 8.0))
+    cap_big4 = float(ref.cpu_capacity_mbps(CPU, jnp.asarray(4, jnp.int32),
+                                           f, 8.0))
+    assert cap_big4 < cap < cap_ref
+    # ... and draw less power than 8 big cores at the same utilization
+    pw = float(model.power_w(CPU, cores, f, 1.0, 100.0))
+    pw_ref = float(ref.power_w(CPU, cores, f, 1.0, 100.0))
+    assert pw < pw_ref
+    # inside the big cluster the models agree exactly
+    for c in (1, 4):
+        ci = jnp.asarray(c, jnp.int32)
+        assert float(model.cpu_capacity_mbps(CPU, ci, f, 8.0)) == \
+            float(ref.cpu_capacity_mbps(CPU, ci, f, 8.0))
+        assert float(model.power_w(CPU, ci, f, 0.7, 100.0)) == \
+            float(ref.power_w(CPU, ci, f, 0.7, 100.0))
+
+
+def test_lossy_wan_step_direct():
+    """The lossy step is jit/vmap-safe and caps the effective window."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.types import TransferParams
+
+    model = api.LossyWanNetworkModel(loss_rate=1e-3, jitter_frac=0.2,
+                                     jitter_period_s=30.0)
+    energy = api.ReferenceEnergyModel()
+    net = NetParams.from_profile(CHAMELEON)
+    state = model.init_state(np.asarray([100.0], np.float32), net)
+    params = TransferParams(pp=jnp.ones((1,)), par=jnp.ones((1,)),
+                            cc=jnp.ones((1,)),
+                            cores=jnp.asarray(8, jnp.int32),
+                            freq_idx=jnp.asarray(6, jnp.int32))
+
+    def one(state):
+        return model.step(energy, net, CPU, state, params,
+                          jnp.asarray([10.0]), 0.1, 1.0)
+
+    state2, out = jax.jit(one)(state)
+    assert float(out.tput_mbps) >= 0.0
+    assert float(state2.t) == pytest.approx(0.1)
+
+
+# ------------------------------------------------ sweeps & group keys -------
+
+def test_mixed_environment_sweep_groups_per_environment():
+    envs = [None, "reference", "lossy-wan", "big-little",
+            api.LossyWanNetworkModel(loss_rate=1e-3)]
+    scenarios = [_scenario(CHAMELEON, "eemt", FAST, environment=e)
+                 for e in envs]
+    # None and "reference" share an executable; the two lossy-wan variants
+    # differ in a static knob, so they compile separately (documented).
+    assert api.group_count(scenarios) == 4
+    results = api.sweep(scenarios)
+    assert all(r.completed for r in results)
+    assert results[0].energy_j == results[1].energy_j
+    assert results[2].energy_j != results[0].energy_j
+    # grouping must not leak results across environments: each matches its
+    # own unbatched run exactly
+    for sc, batched in zip(scenarios, results):
+        single = api.run(sc)
+        assert (single.time_s, single.energy_j) == \
+            (batched.time_s, batched.energy_j)
+
+
+def test_sweep_with_empty_devices_falls_back_to_unbatched():
+    """Satellite: devices=[] must run the plain single-device path
+    explicitly (and produce results identical to the default)."""
+    scenarios = [_scenario(CHAMELEON, "eemt", FAST),
+                 _scenario(CHAMELEON, "eemt", ONE),
+                 _scenario(CLOUDLAB, "me", FAST)]
+    default = api.sweep(scenarios)
+    empty = api.sweep(scenarios, devices=[])
+    for a, b in zip(default, empty):
+        assert (a.time_s, a.energy_j, a.completed) == \
+            (b.time_s, b.energy_j, b.completed)
+
+
+# -------------------------------------------------- scenario validation -----
+
+def test_scenario_rejects_empty_datasets():
+    with pytest.raises(ValueError, match="dataset"):
+        api.Scenario(profile=CHAMELEON, datasets=(), controller="eemt")
+
+
+def test_scenario_rejects_nonpositive_dt():
+    with pytest.raises(ValueError, match="dt"):
+        api.Scenario(profile=CHAMELEON, datasets=FAST, controller="eemt",
+                     dt=0.0)
+    with pytest.raises(ValueError, match="dt"):
+        api.Scenario(profile=CHAMELEON, datasets=FAST, controller="eemt",
+                     dt=-0.1)
+
+
+def test_scenario_rejects_subtick_horizon():
+    with pytest.raises(ValueError, match="total_s"):
+        api.Scenario(profile=CHAMELEON, datasets=FAST, controller="eemt",
+                     total_s=0.05, dt=0.1)
+    # exactly one tick is fine
+    api.Scenario(profile=CHAMELEON, datasets=FAST, controller="eemt",
+                 total_s=0.1, dt=0.1)
+
+
+# ------------------------------------------------- heterogeneous fleets -----
+
+def test_heterogeneous_fleet_environments_complete_and_differ():
+    """A pool mixing reference / lossy-wan / big.LITTLE hosts: pinned
+    identical requests complete everywhere, and the per-host physics shows
+    up in the results (wave grouping keys on environment code)."""
+    hosts = (fleet.Host("ref", nic_mbps=NO_CONTENTION),
+             fleet.Host("wan", nic_mbps=NO_CONTENTION,
+                        environment="lossy-wan"),
+             fleet.Host("edge", nic_mbps=NO_CONTENTION,
+                        environment="big-little"))
+    reqs = [fleet.TransferRequest(arrival_s=0.0, datasets=FAST,
+                                  controller=_mk("eemt"), profile=CHAMELEON,
+                                  host=i, name=h.name, total_s=600.0)
+            for i, h in enumerate(hosts)]
+    rep = fleet.run_fleet(reqs, hosts, wave_s=5.0, dt=0.1)
+    got = {t.name: t for t in rep.transfers}
+    assert all(t.completed for t in got.values())
+    # per-host environments are really in effect
+    solo_ref = api.run(_scenario(CHAMELEON, "eemt", FAST))
+    assert got["ref"].energy_j == solo_ref.energy_j      # zero contention
+    assert got["wan"].energy_j > got["ref"].energy_j
+    assert got["edge"].energy_j != got["ref"].energy_j
+    # ... and match the same environment through api.run exactly
+    for name, env in (("wan", "lossy-wan"), ("edge", "big-little")):
+        solo = api.run(api.Scenario(profile=CHAMELEON, datasets=FAST,
+                                    controller=_mk("eemt"), environment=env,
+                                    total_s=600.0, dt=0.1))
+        assert got[name].time_s == solo.time_s
+        assert got[name].energy_j == solo.energy_j
+
+
+def test_heterogeneous_fleet_unpinned_trace_completes():
+    """Unpinned arrivals across a mixed-environment pool: combos created
+    lazily for late (cpu, environment) pairs still pad and run."""
+    hosts = (fleet.Host("h0", nic_mbps=NO_CONTENTION, slots=1),
+             fleet.Host("h1", nic_mbps=NO_CONTENTION, slots=1,
+                        environment="lossy-wan"),
+             fleet.Host("h2", nic_mbps=NO_CONTENTION, slots=1,
+                        environment=api.Environment(
+                            energy=api.BigLittleEnergyModel(n_big=2))))
+    trace = fleet.poisson_trace(rate_per_s=1.0, n_transfers=9,
+                                datasets=[FAST, ONE],
+                                controllers=("eemt", "wget/curl"),
+                                profile=CHAMELEON, seed=11, total_s=600.0)
+    rep = fleet.run_fleet(trace, hosts, wave_s=5.0, dt=0.1)
+    assert len(rep.transfers) == 9
+    assert all(t.completed for t in rep.transfers)
+    assert rep.dropped == 0
+
+
+def test_host_pool_threads_environment():
+    pool = fleet.host_pool(3, environment="lossy-wan")
+    assert all(h.environment == "lossy-wan" for h in pool)

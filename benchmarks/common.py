@@ -1,14 +1,20 @@
-"""Shared helpers for the benchmark harness.
+"""Shared tables for the benchmark harness.
 
 Every benchmark prints CSV rows:  name,us_per_call,derived
 where ``us_per_call`` is the wall-clock microseconds of the measured call
 and ``derived`` is the benchmark's headline metric (throughput, joules, ...).
 
-Batched suites (fig2/fig3/fig4 run their whole grid through one
-``repro.api.sweep``) report the sweep total divided by the cell count in the
-``us_per_call`` column: per-cell wall time has no meaning when many cells
-share one vmapped XLA launch, so treat those values as grid-amortized (they
-also fold in compile time).
+The figure suites (fig2/fig3/fig4) run their whole grid through one
+``repro.api.Experiment`` and report the *steady-state* sweep total divided
+by the cell count in the ``us_per_call`` column: per-cell wall time has no
+meaning when many cells share one vmapped XLA launch, so treat those values
+as grid-amortized.  Compile time is measured separately (the cold/warm
+split in ``Experiment.run(timing="split")``) and lands in the BENCH JSON
+records as ``*_compile_s``, never folded into ``us_per_call``.
+
+Grid enumeration, sweep execution, and result tabulation all live in
+``repro.api.experiments`` now — this module only keeps the profile/dataset
+tables the paper's figures share, and the one-line CSV emitter.
 """
 from __future__ import annotations
 
@@ -34,23 +40,6 @@ def budget_for(prof) -> float:
     """Per-testbed transfer time budget (seconds): low-bandwidth testbeds
     (CloudLab/DIDCLab, 1 Gbps) get the longer window the paper allows."""
     return 28800.0 if prof.bandwidth_mbps < 500 else 7200.0
-
-
-def timed_sweep(scenarios):
-    """Run ``api.sweep`` over the grid, returning (results, secs_per_cell).
-
-    Owns the grid-amortized timing convention described above: one wall-clock
-    measurement of the whole sweep (compile time included), divided evenly
-    across cells.
-    """
-    import time
-
-    from repro import api
-
-    t0 = time.perf_counter()
-    results = api.sweep(scenarios)
-    secs = (time.perf_counter() - t0) / max(len(scenarios), 1)
-    return results, secs
 
 
 def emit(name: str, seconds: float, derived) -> str:

@@ -1,27 +1,44 @@
 """CI perf-regression gate: compare two BENCH records.
 
     python -m benchmarks.compare BASELINE.json CURRENT.json [--tolerance 25]
+    python -m benchmarks.compare --rebaseline BENCH_ci.json
 
-Both files are ``benchmarks.run --json`` records (``{"metrics": {...}}``).
-Metric direction is inferred from the name: ``*_wall_s`` / ``*_s`` are
-lower-is-better, ``*_per_sec`` higher-is-better.  The gate fails (exit 1)
-when any metric present in the baseline regresses by more than
-``--tolerance`` percent, or is missing from the current record (a silently
-dropped benchmark must not pass the gate).  Metrics only in the current
-record are reported as new and do not fail — that is how the trajectory
-grows.
+Both files are ``benchmarks.run --json`` records (``{"metrics": {...},
+"reports": {...}}``).  Metric direction is inferred from the name:
+``*_wall_s`` / ``*_s`` are lower-is-better, ``*_per_sec`` higher-is-better.
+The gate fails (exit 1) when any metric present in the baseline regresses
+by more than ``--tolerance`` percent, or is missing from the current record
+(a silently dropped benchmark must not pass the gate).  Metrics only in the
+current record are reported as new and do not fail — that is how the
+trajectory grows.
+
+Records may embed ``repro.api.Report`` payloads under ``reports`` (the
+figure grids and the fleet per-controller table).  When a report name
+appears in both records, the gate additionally checks *completion parity*:
+a cell that completed in the baseline must still complete in the current
+record — wall-clock tolerance must not mask a correctness regression.
+
+``--rebaseline`` closes the re-baseline loop: point it at a bench-smoke
+``BENCH_ci.json`` artifact and it rewrites
+``benchmarks/baselines/BENCH_baseline.json`` from the artifact's gated
+metrics (the ``*_per_sec`` steady-state ones — wall-clock metrics restate
+the same measurement and cold walls jitter past the tolerance, so they
+stay in the artifact ungated).  Commit the rewritten baseline.
 
 CI wall-clock is noisy across runner generations; 25% is deliberately a
 coarse tripwire for order-of-magnitude mistakes (an accidentally disabled
-vmap, a per-wave recompile), not a microbenchmark.  Re-baseline by
-committing a fresh record to benchmarks/baselines/ when hardware or
-intentional perf changes move the floor.
+vmap, a per-wave recompile), not a microbenchmark.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baselines",
+                             "BENCH_baseline.json")
+GATED_SUFFIX = "_per_sec"
 
 
 def _direction(name: str) -> str:
@@ -33,7 +50,7 @@ def _direction(name: str) -> str:
                      f"use a *_s or *_per_sec suffix")
 
 
-def _load(path: str) -> dict:
+def _load_record(path: str) -> dict:
     with open(path) as f:
         record = json.load(f)
     metrics = record.get("metrics")
@@ -41,12 +58,12 @@ def _load(path: str) -> dict:
         raise SystemExit(f"{path}: no metrics section")
     if record.get("meta", {}).get("provisional"):
         # The soft-fail escape hatch is gone: a baseline either gates or it
-        # has no business being committed.  Re-capture from a bench-smoke
-        # artifact instead of resurrecting the flag.
+        # has no business being committed.  Re-baseline with --rebaseline
+        # from a bench-smoke artifact instead of resurrecting the flag.
         raise SystemExit(f"{path}: marked meta.provisional — provisional "
                          f"baselines are no longer supported; re-baseline "
                          f"from a CI bench-smoke artifact")
-    return metrics
+    return record
 
 
 def compare(baseline: dict, current: dict, tolerance_pct: float) -> list:
@@ -79,16 +96,100 @@ def compare(baseline: dict, current: dict, tolerance_pct: float) -> list:
     return failures
 
 
+def compare_reports(baseline: dict, current: dict) -> list:
+    """Completion-parity check over embedded Report payloads.
+
+    For every report name present in both records: total completed cells
+    must not drop below the baseline's.  Reports only on one side are
+    informational (suites come and go with the trajectory).
+    """
+    from repro.api import Report
+
+    failures = []
+    for name in sorted(set(baseline) & set(current)):
+        base_r = Report.from_dict(baseline[name])
+        cur_r = Report.from_dict(current[name])
+        if "completed" not in base_r.columns or \
+                "completed" not in cur_r.columns:
+            continue
+        # Sums work for both spellings of the column: per-cell 0/1 flags
+        # (figure grids) and per-group counts (the fleet table).
+        base_done = int(base_r["completed"].sum())
+        cur_done = int(cur_r["completed"].sum())
+        status = "ok" if cur_done >= base_done else "REGRESSION"
+        print(f"report:{name}: completed baseline={base_done} "
+              f"current={cur_done} ({len(cur_r)} rows) [{status}]")
+        if cur_done < base_done:
+            failures.append(f"report:{name}: completed cells dropped "
+                            f"{base_done} -> {cur_done}")
+    for name in sorted(set(current) - set(baseline)):
+        print(f"report:{name}: [new]")
+    return failures
+
+
+def rebaseline(artifact_path: str, out_path: str = BASELINE_PATH,
+               suffix: str = GATED_SUFFIX) -> dict:
+    """Rewrite the committed baseline from a CI ``BENCH_ci.json`` artifact.
+
+    Copies the gated metrics (names ending in ``suffix``), the artifact's
+    Report payloads (so the completion-parity check has a baseline to
+    compare against), and the platform meta, stamping the provenance so
+    the baseline explains itself.  Returns the written record.
+    """
+    record = _load_record(artifact_path)
+    gated = {k: v for k, v in record["metrics"].items()
+             if k.endswith(suffix)}
+    if not gated:
+        raise SystemExit(f"{artifact_path}: no *{suffix} metrics to gate on")
+    meta = {k: v for k, v in record.get("meta", {}).items()
+            if k in ("python", "machine", "smoke")}
+    meta["note"] = (f"Gated metrics: steady-state *{suffix} only — wall "
+                    f"clocks restate the same measurement and cold walls "
+                    f"jitter past the tolerance, so those stay in "
+                    f"BENCH_ci.json ungated. The reports section feeds the "
+                    f"completion-parity check (cells that completed must "
+                    f"keep completing). Rewritten by `benchmarks.compare "
+                    f"--rebaseline` from a bench-smoke BENCH_ci artifact; "
+                    f"re-run that command on a fresh artifact whenever the "
+                    f"runner class or an intentional perf change moves the "
+                    f"floor.")
+    out = {"metrics": gated, "reports": record.get("reports", {}),
+           "meta": meta}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"rebaselined {out_path} from {artifact_path}: "
+          f"{', '.join(sorted(gated))}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline")
-    ap.add_argument("current")
+    ap.add_argument("baseline", nargs="?", default=None)
+    ap.add_argument("current", nargs="?", default=None)
     ap.add_argument("--tolerance", type=float, default=25.0,
                     help="allowed regression, percent (default 25)")
+    ap.add_argument("--rebaseline", default=None, metavar="ARTIFACT",
+                    help="rewrite the committed baseline from a BENCH_ci "
+                         "artifact instead of comparing")
+    ap.add_argument("--out", default=BASELINE_PATH,
+                    help="baseline path for --rebaseline")
     args = ap.parse_args()
-    baseline = _load(args.baseline)
-    current = _load(args.current)
-    failures = compare(baseline, current, args.tolerance)
+
+    if args.rebaseline is not None:
+        if args.baseline is not None or args.current is not None:
+            ap.error("--rebaseline takes no positional records")
+        rebaseline(args.rebaseline, args.out)
+        return
+
+    if args.baseline is None or args.current is None:
+        ap.error("need BASELINE and CURRENT records (or --rebaseline)")
+    base_record = _load_record(args.baseline)
+    cur_record = _load_record(args.current)
+    failures = compare(base_record["metrics"], cur_record["metrics"],
+                       args.tolerance)
+    failures += compare_reports(base_record.get("reports", {}),
+                                cur_record.get("reports", {}))
     if failures:
         print("\nperf gate FAILED:", file=sys.stderr)
         for f in failures:

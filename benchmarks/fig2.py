@@ -1,12 +1,13 @@
 """Paper Figure 2: throughput + energy of every tool across the 3 testbeds
 and 4 datasets (small / medium / large / mixed).
 
-The whole 3x4x6 grid goes through ``repro.api.sweep`` — scenarios sharing a
-controller code path run as one vmapped XLA launch, so the grid needs a
-handful of compiled executables instead of 72 sequential jit calls.
+The whole 3x4x6 grid is one declarative ``repro.api.Experiment``: scenarios
+sharing a controller code path run as one vmapped XLA launch, so the grid
+needs a handful of compiled executables instead of 72 sequential jit calls.
 
 Rows: fig2/<testbed>/<dataset>/<tool>, derived = "<gbps>Gbps;<J>J".
-The us_per_call column is grid-amortized (sweep total / cells) — see
+The us_per_call column is grid-amortized steady-state time (warm sweep
+total / cells); compile time is reported separately — see
 benchmarks.common.
 """
 from __future__ import annotations
@@ -14,7 +15,7 @@ from __future__ import annotations
 from repro import api
 from repro.core import CpuProfile
 
-from .common import DATASETS, TESTBEDS, budget_for, emit, timed_sweep
+from .common import DATASETS, TESTBEDS, budget_for, emit
 
 CPU = CpuProfile()
 
@@ -28,58 +29,63 @@ SMOKE_DATASETS = ("small", "mixed")
 SMOKE_TOOLS = ("wget/curl", "ME", "EEMT")
 
 
-def make_scenario(testbed: str, dataset: str, tool: str,
-                  total_s: float | None = None) -> api.Scenario:
-    prof = TESTBEDS[testbed]
-    budget = budget_for(prof) if total_s is None else total_s
-    ctrl = (api.make_controller(tool, max_ch=64)
-            if tool in ("ME", "EEMT") else tool)
-    return api.Scenario(profile=prof, datasets=DATASETS[dataset],
-                        controller=ctrl, cpu=CPU, total_s=budget)
+def _controller(cell):
+    tool = cell["tool"]
+    return api.make_controller(tool, max_ch=64) \
+        if tool in ("ME", "EEMT") else tool
 
 
-def run(rows=None, smoke: bool = False):
-    if smoke:
-        cells = [(tb, ds, tool) for tb in SMOKE_TESTBEDS
-                 for ds in SMOKE_DATASETS for tool in SMOKE_TOOLS]
-        scenarios = [make_scenario(*c, total_s=900.0) for c in cells]
-    else:
-        cells = [(tb, ds, tool) for tb in TESTBEDS for ds in DATASETS
-                 for tool in TOOLS]
-        scenarios = [make_scenario(*c) for c in cells]
-    n_groups = api.group_count(scenarios)
+def experiment(smoke: bool = False) -> api.Experiment:
+    testbeds = SMOKE_TESTBEDS if smoke else tuple(TESTBEDS)
+    datasets = SMOKE_DATASETS if smoke else tuple(DATASETS)
+    tools = SMOKE_TOOLS if smoke else TOOLS
+    return api.Experiment(
+        name="fig2",
+        space=api.grid(
+            api.axis("testbed", {tb: TESTBEDS[tb] for tb in testbeds},
+                     field="profile"),
+            api.axis("dataset", {ds: DATASETS[ds] for ds in datasets},
+                     field="datasets"),
+            api.axis("tool", tools)),
+        base={
+            "cpu": CPU,
+            "controller": _controller,
+            "total_s": 900.0 if smoke
+            else (lambda c: budget_for(c["profile"])),
+        })
 
-    swept, secs = timed_sweep(scenarios)
 
-    results = {}
-    for (tb, ds, tool), r in zip(cells, swept):
-        tag = f"fig2/{tb}/{ds}/{tool}"
-        emit(tag, secs,
-             f"{r.avg_tput_gbps:.3f}Gbps;{r.energy_j:.0f}J;"
-             f"done={int(r.completed)}")
-        results[(tb, ds, tool)] = r
-        if rows is not None:
-            rows.append((tag, r))
+def run(smoke: bool = False, *, timing: str = "split",
+        cache: str | None = None) -> api.Report:
+    exp = experiment(smoke)
+    cells = exp.cells()
+    n_groups = api.group_count([c.scenario for c in cells])
+    report = exp.run(timing=timing, cache=cache, cells=cells)
+    secs = report.meta.get("us_per_cell", 0.0) / 1e6
+    for row in report.rows():
+        emit(f"fig2/{row['testbed']}/{row['dataset']}/{row['tool']}", secs,
+             f"{row['avg_tput_gbps']:.3f}Gbps;{row['energy_j']:.0f}J;"
+             f"done={int(row['completed'])}")
     emit("fig2/meta/executables", 0.0,
-         f"groups={n_groups};cells={len(cells)}")
-    return results
+         f"groups={n_groups};cells={len(report)}")
+    return report
 
 
-def headline(results) -> dict:
+def headline(report: api.Report) -> dict:
     """The paper's headline comparisons on the mixed dataset."""
     out = {}
-    for tb in TESTBEDS:
-        me = results[(tb, "mixed", "ME")]
-        imin = results[(tb, "mixed", "ismail-min-energy")]
-        eemt = results[(tb, "mixed", "EEMT")]
-        imax = results[(tb, "mixed", "ismail-max-tput")]
+    for tb in dict.fromkeys(report["testbed"]):
+        mixed = report.select(testbed=tb, dataset="mixed")
+        by_tool = {row["tool"]: row for row in mixed.rows()}
+        me, imin = by_tool["ME"], by_tool["ismail-min-energy"]
+        eemt, imax = by_tool["EEMT"], by_tool["ismail-max-tput"]
         out[tb] = {
             "me_energy_reduction_pct":
-                100.0 * (1 - me.energy_j / imin.energy_j),
+                100.0 * (1 - me["energy_j"] / imin["energy_j"]),
             "eemt_tput_gain_pct":
-                100.0 * (eemt.avg_tput_gbps / imax.avg_tput_gbps - 1),
+                100.0 * (eemt["avg_tput_gbps"] / imax["avg_tput_gbps"] - 1),
             "eemt_energy_reduction_pct":
-                100.0 * (1 - eemt.energy_j / imax.energy_j),
+                100.0 * (1 - eemt["energy_j"] / imax["energy_j"]),
         }
     return out
 
@@ -91,14 +97,22 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid for CI: asserts every cell completes")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="experiment cell cache directory (an unchanged "
+                         "grid re-run is served without sweeping)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the Report JSON")
     args = ap.parse_args()
+    report = run(smoke=args.smoke, cache=args.cache)
+    if args.report is not None:
+        report.to_json(args.report)
+        print(f"# wrote {args.report}")
     if args.smoke:
-        res = run(smoke=True)
-        incomplete = [c for c, r in res.items() if not r.completed]
+        incomplete = [f"{r['testbed']}/{r['dataset']}/{r['tool']}"
+                      for r in report.rows() if not r["completed"]]
         if incomplete:
             # not assert: the CI gate must survive python -O
             raise SystemExit(f"smoke cells did not complete: {incomplete}")
-        print(f"# smoke ok: {len(res)} cells completed")
+        print(f"# smoke ok: {len(report)} cells completed")
     else:
-        res = run()
-        print(json.dumps(headline(res), indent=2))
+        print(json.dumps(headline(report), indent=2))

@@ -2,52 +2,61 @@
 80/60/40/20% of the theoretical bandwidth on Chameleon + CloudLab, mixed
 dataset.  DIDCLab is excluded as in the paper (low bandwidth).
 
-All targets of one algorithm share a compiled executable: the target is a
-traced SLA scalar, so ``repro.api.sweep`` vmaps the 4-fraction column.
+The grid is one ``repro.api.Experiment``; all targets of one algorithm
+share a compiled executable (the target is a traced SLA scalar, so the
+sweep vmaps the 4-fraction column).
 
 Rows: fig3/<testbed>/<target-frac>/<algo>.  The us_per_call column is
-grid-amortized (sweep total / cells) — see benchmarks.common.
+grid-amortized steady-state time — see benchmarks.common.
 """
 from __future__ import annotations
 
 from repro import api
 from repro.core import MIXED, CpuProfile
 
-from .common import TESTBEDS, budget_for, emit, timed_sweep
+from .common import TESTBEDS, budget_for, emit
 
 CPU = CpuProfile()
 FRACS = (0.8, 0.6, 0.4, 0.2)
 
 
-def run(rows=None):
-    cells, scenarios = [], []
-    for tb in ("chameleon", "cloudlab"):
-        prof = TESTBEDS[tb]
-        budget = budget_for(prof)
-        for frac in FRACS:
-            tgt = prof.bandwidth_mbps * frac
-            for ctrl_name, name in (("EETT", "EETT"),
-                                    ("ismail-target", "ismail-target")):
-                ctrl = api.make_controller(ctrl_name, target_tput_mbps=tgt,
-                                           max_ch=64)
-                cells.append((tb, frac, name, tgt))
-                scenarios.append(api.Scenario(
-                    profile=prof, datasets=MIXED, controller=ctrl, cpu=CPU,
-                    total_s=budget))
+def _controller(cell):
+    target = cell["profile"].bandwidth_mbps * cell["frac"]
+    return api.make_controller(cell["algo"], target_tput_mbps=target,
+                               max_ch=64)
 
-    swept, secs = timed_sweep(scenarios)
 
-    results = {}
-    for (tb, frac, name, tgt), r in zip(cells, swept):
-        err = abs(r.avg_tput_MBps - tgt) / tgt
-        tag = f"fig3/{tb}/{int(frac * 100)}pct/{name}"
+def experiment() -> api.Experiment:
+    return api.Experiment(
+        name="fig3",
+        space=api.grid(
+            api.axis("testbed",
+                     {tb: TESTBEDS[tb] for tb in ("chameleon", "cloudlab")},
+                     field="profile"),
+            api.axis("frac", FRACS),
+            api.axis("algo", ("EETT", "ismail-target"))),
+        base={
+            "cpu": CPU,
+            "datasets": MIXED,
+            "controller": _controller,
+            "total_s": lambda c: budget_for(c["profile"]),
+        })
+
+
+def run(*, timing: str = "split", cache: str | None = None) -> api.Report:
+    exp = experiment()
+    cells = exp.cells()
+    report = exp.run(timing=timing, cache=cache, cells=cells)
+    secs = report.meta.get("us_per_cell", 0.0) / 1e6
+    for cell, row in zip(cells, report.rows()):
+        tgt = cell.values["testbed"].bandwidth_mbps * cell.values["frac"]
+        err = abs(row["avg_tput_MBps"] - tgt) / tgt
+        tag = (f"fig3/{row['testbed']}/"
+               f"{int(cell.values['frac'] * 100)}pct/{row['algo']}")
         emit(tag, secs,
-             f"{r.avg_tput_gbps:.3f}Gbps;target_err={err:.2f};"
-             f"{r.energy_j:.0f}J")
-        results[(tb, frac, name)] = r
-        if rows is not None:
-            rows.append((tag, r))
-    return results
+             f"{row['avg_tput_gbps']:.3f}Gbps;target_err={err:.2f};"
+             f"{row['energy_j']:.0f}J")
+    return report
 
 
 if __name__ == "__main__":

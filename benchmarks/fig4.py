@@ -2,63 +2,79 @@
 ME and EEMT with and without the Algorithm-3 load-control module, vs the
 Alan/Ismail static tuners, mixed dataset, all 3 testbeds.
 
+The irregular grid (tuners carry a ``scaling`` axis, the static baselines
+do not) is expressed as ``grid(testbed, chain(tuners x scaling,
+baselines))`` — one Experiment, one sweep.
+
 Rows: fig4/<testbed>/<algo>[-noscale].  The us_per_call column is
-grid-amortized (sweep total / cells) — see benchmarks.common.
+grid-amortized steady-state time — see benchmarks.common.
 """
 from __future__ import annotations
 
 from repro import api
 from repro.core import MIXED, CpuProfile
 
-from .common import TESTBEDS, budget_for, emit, timed_sweep
+from .common import TESTBEDS, budget_for, emit
 
 CPU = CpuProfile()
 
 
-def run(rows=None):
-    cells, scenarios = [], []
-    for tb, prof in TESTBEDS.items():
-        budget = budget_for(prof)
-        for name in ("ME", "EEMT"):
-            for scaling in (True, False):
-                ctrl = api.make_controller(name, max_ch=64, scaling=scaling)
-                cells.append((tb, name, scaling))
-                scenarios.append(api.Scenario(
-                    profile=prof, datasets=MIXED, controller=ctrl, cpu=CPU,
-                    total_s=budget))
-        for base in ("ismail-min-energy", "ismail-max-tput"):
-            cells.append((tb, base, None))
-            scenarios.append(api.Scenario(
-                profile=prof, datasets=MIXED, controller=base, cpu=CPU,
-                total_s=budget))
-
-    swept, secs = timed_sweep(scenarios)
-
-    results = {}
-    for (tb, name, scaling), r in zip(cells, swept):
-        suffix = "" if scaling in (True, None) else "-noscale"
-        tag = f"fig4/{tb}/{name}{suffix}"
-        emit(tag, secs, f"{r.energy_j:.0f}J;{r.avg_tput_gbps:.3f}Gbps")
-        results[(tb, name, scaling)] = r
-        if rows is not None:
-            rows.append((tag, r))
-    return results
+def _controller(cell):
+    if cell["algo"] in ("ME", "EEMT"):
+        return api.make_controller(cell["algo"], max_ch=64,
+                                   scaling=cell["scaling"])
+    return cell["algo"]
 
 
-def scaling_contribution(results) -> dict:
+def experiment() -> api.Experiment:
+    return api.Experiment(
+        name="fig4",
+        space=api.grid(
+            api.axis("testbed", TESTBEDS, field="profile"),
+            api.chain(
+                api.grid(api.axis("algo", ("ME", "EEMT")),
+                         api.axis("scaling", (True, False))),
+                api.axis("algo", ("ismail-min-energy", "ismail-max-tput")))),
+        base={
+            "cpu": CPU,
+            "datasets": MIXED,
+            "controller": _controller,
+            "total_s": lambda c: budget_for(c["profile"]),
+        })
+
+
+def _tag(row) -> str:
+    suffix = "-noscale" if row["scaling"] == "false" else ""
+    return f"fig4/{row['testbed']}/{row['algo']}{suffix}"
+
+
+def run(*, timing: str = "split", cache: str | None = None) -> api.Report:
+    exp = experiment()
+    report = exp.run(timing=timing, cache=cache)
+    secs = report.meta.get("us_per_cell", 0.0) / 1e6
+    for row in report.rows():
+        emit(_tag(row), secs,
+             f"{row['energy_j']:.0f}J;{row['avg_tput_gbps']:.3f}Gbps")
+    return report
+
+
+def scaling_contribution(report: api.Report) -> dict:
     """Extra energy cut contributed by Algorithm 3 (paper: ~17-19%)."""
     out = {}
-    for tb in TESTBEDS:
+    for tb in dict.fromkeys(report["testbed"]):
+        def energy(algo, scaling):
+            sel = report.select(testbed=tb, algo=algo, scaling=scaling)
+            return float(sel["energy_j"][0])
         out[tb] = {
-            "ME_extra_pct": 100.0 * (1 - results[(tb, "ME", True)].energy_j
-                                     / results[(tb, "ME", False)].energy_j),
-            "EEMT_extra_pct": 100.0 * (1 - results[(tb, "EEMT", True)].energy_j
-                                       / results[(tb, "EEMT", False)].energy_j),
+            "ME_extra_pct":
+                100.0 * (1 - energy("ME", "true") / energy("ME", "false")),
+            "EEMT_extra_pct":
+                100.0 * (1 - energy("EEMT", "true")
+                         / energy("EEMT", "false")),
         }
     return out
 
 
 if __name__ == "__main__":
     import json
-    res = run()
-    print(json.dumps(scaling_contribution(res), indent=2))
+    print(json.dumps(scaling_contribution(run()), indent=2))

@@ -65,6 +65,33 @@ def build(smoke: bool = False):
     return trace, hosts
 
 
+def controller_report(report) -> "api.Report":
+    """Tabulate ``FleetReport.by_controller`` as a columnar ``api.Report``
+    (the same schema the figure grids emit, so ``benchmarks.compare`` and
+    downstream tooling read one format)."""
+    from repro import api
+
+    rows = report.by_controller()
+    nan = float("nan")
+    cols: dict[str, list] = {
+        "controller": [], "transfers": [], "completed": [], "energy_j": [],
+        "gb": [], "joules_per_gb": [], "mean_time_s": [], "mean_wait_s": [],
+        "p50_slowdown": [], "p95_slowdown": [], "p99_slowdown": [],
+    }
+    for name, row in rows.items():
+        cols["controller"].append(name)
+        for k in ("transfers", "completed", "energy_j", "gb",
+                  "joules_per_gb", "mean_time_s", "mean_wait_s"):
+            cols[k].append(float(row[k]))
+        for p in ("p50", "p95", "p99"):
+            v = row["slowdown"][p]
+            cols[f"{p}_slowdown"].append(nan if v is None else float(v))
+    return api.Report(cols, axes=("controller",), derive=False,
+                      meta={"experiment": "fleet",
+                            "transfers": len(report.transfers),
+                            "sim_s": report.sim_s})
+
+
 def run(smoke: bool = False, json_path: str | None = None,
         warm: bool = False) -> dict:
     """``warm=True`` runs the fleet once untimed first so every wave-runner
@@ -89,12 +116,13 @@ def run(smoke: bool = False, json_path: str | None = None,
     tps = len(trace) / wall_s
 
     per_xfer_s = wall_s / len(trace)
-    for name, row in report.by_controller().items():
-        p99 = row["slowdown"]["p99"]
-        emit(f"fleet/{name}", per_xfer_s,
+    ctrl_report = controller_report(report)
+    for row in ctrl_report.rows():
+        p99 = row["p99_slowdown"]
+        emit(f"fleet/{row['controller']}", per_xfer_s,
              f"{row['joules_per_gb']:.1f}J/GB;"
-             f"p99={'na' if p99 is None else format(p99, '.2f')};"
-             f"n={row['transfers']}")
+             f"p99={'na' if p99 != p99 else format(p99, '.2f')};"
+             f"n={row['transfers']:.0f}")
     emit("fleet/meta", per_xfer_s,
          f"transfers={len(trace)};hosts={len(hosts)};"
          f"completed={report.completed};sim_s={report.sim_s:.0f};"
@@ -108,10 +136,11 @@ def run(smoke: bool = False, json_path: str | None = None,
     if cold_wall_s is not None:
         record["cold_wall_s"] = cold_wall_s
     if json_path is not None:
-        report.to_json(json_path, **record)
+        report.to_json(json_path, report=ctrl_report.to_dict(), **record)
         print(f"# wrote {json_path}")
     summary = report.summary()
     summary.update(record)
+    summary["report"] = ctrl_report.to_dict()
     return summary
 
 

@@ -9,9 +9,13 @@ summary of the paper's headline claims at the end.
 
 ``--json`` additionally writes a BENCH perf record — the wall-clock metrics
 the CI perf-regression gate tracks (see benchmarks/compare.py and the
-committed baseline in benchmarks/baselines/).  ``--smoke`` shrinks fig2 and
-fleet to their CI-sized grids so the record is comparable across runs of
-the gate.
+committed baseline in benchmarks/baselines/) plus the figure/fleet Report
+JSON payloads under ``reports`` (the per-cell results the re-baseline loop
+and completion-parity check consume).  Compile time is split out into
+``*_compile_s`` metrics via the Experiment cold/warm timing split; the
+``*_warm_wall_s`` metrics are steady-state (compile-excluded, best-of-3).
+``--smoke`` shrinks fig2 and fleet to their CI-sized grids so the record
+is comparable across runs of the gate.
 """
 from __future__ import annotations
 
@@ -28,41 +32,52 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grids for fig2/fleet")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write a BENCH perf record (wall-clock metrics)")
+                    help="write a BENCH perf record (wall-clock metrics "
+                         "+ Report payloads)")
     args = ap.parse_args()
     only = set(args.only.split(","))
 
     print("name,us_per_call,derived")
     summary = {}
     bench = {}
+    reports = {}
 
     if "fig2" in only:
         from . import fig2
         prefix = "fig2_smoke" if args.smoke else "fig2"
         t0 = time.perf_counter()
-        res = fig2.run(smoke=args.smoke)
+        report = fig2.run(smoke=args.smoke)
         bench[f"{prefix}_wall_s"] = time.perf_counter() - t0
+        if "compile_s" in report.meta:
+            bench[f"{prefix}_compile_s"] = report.meta["compile_s"]
+        reports[prefix] = report.to_dict()
         if args.json is not None:
             # Warm passes: runners are cached, so these time simulation
             # (not XLA compile) — the stable metric the perf gate compares;
-            # best-of-3 because scheduler noise only ever adds time.
-            walls = []
-            for _ in range(3):
-                t0 = time.perf_counter()
-                fig2.run(smoke=args.smoke)
-                walls.append(time.perf_counter() - t0)
+            # best-of-3 because scheduler noise only ever adds time.  The
+            # first sample is the split-timing warm pass from above.
+            walls = [report.meta["warm_wall_s"]]
+            for _ in range(2):
+                r = fig2.run(smoke=args.smoke, timing="cold")
+                walls.append(r.meta["wall_s"])
             bench[f"{prefix}_warm_wall_s"] = min(walls)
         if not args.smoke:
-            summary["fig2_headline"] = fig2.headline(res)
+            summary["fig2_headline"] = fig2.headline(report)
 
     if "fig3" in only:
         from . import fig3
-        fig3.run()
+        r3 = fig3.run()
+        if "compile_s" in r3.meta:
+            bench["fig3_compile_s"] = r3.meta["compile_s"]
+        reports["fig3"] = r3.to_dict()
 
     if "fig4" in only:
         from . import fig4
-        res4 = fig4.run()
-        summary["fig4_scaling_contribution"] = fig4.scaling_contribution(res4)
+        r4 = fig4.run()
+        if "compile_s" in r4.meta:
+            bench["fig4_compile_s"] = r4.meta["compile_s"]
+        reports["fig4"] = r4.to_dict()
+        summary["fig4_scaling_contribution"] = fig4.scaling_contribution(r4)
 
     if "micro" in only:
         from . import micro
@@ -83,6 +98,7 @@ def main() -> None:
         else:
             bench[f"{prefix}_wall_s"] = frec["wall_s"]
         bench[f"{prefix}_transfers_per_sec"] = frec["transfers_per_sec"]
+        reports[prefix] = frec["report"]
         summary["fleet"] = {k: frec[k] for k in
                             ("transfers", "completed", "joules_per_gb",
                              "slowdown")}
@@ -90,6 +106,7 @@ def main() -> None:
     if args.json is not None:
         record = {
             "metrics": bench,
+            "reports": reports,
             "meta": {
                 "python": platform.python_version(),
                 "machine": platform.machine(),

@@ -33,7 +33,12 @@ from .environments import (BigLittleEnergyModel, EnergyModel,  # noqa: F401
                            make_energy_model, make_environment,
                            make_network_model, register_energy_model,
                            register_environment, register_network_model)
+from .experiments import (Axis, Cell, Experiment, axis, chain,  # noqa: F401
+                          clear_cache, fingerprint, grid, scenario_key,
+                          zip_)
+from .report import Report  # noqa: F401
 from .scenario import Scenario, group_count, run, sweep  # noqa: F401
+from .tuning import TuneResult, crn_bw_schedule, tune  # noqa: F401
 
 # Fleet-scale entry points.  repro.fleet builds ON TOP of the Scenario /
 # engine substrate and the controller registry above, so these re-exports
@@ -51,15 +56,18 @@ def __getattr__(name):
 
 
 __all__ = [
-    "BigLittleEnergyModel", "Controller", "ControllerInit", "EnergyModel",
-    "Environment", "FleetReport", "Host", "IsmailTargetController",
-    "LossyWanNetworkModel", "NetworkModel", "ReferenceEnergyModel",
-    "ReferenceNetworkModel", "Scenario", "StaticBaselineController",
-    "TransferRequest", "TransferResult", "TunerController", "as_controller",
-    "as_environment", "group_count", "host_pool", "list_controllers",
+    "Axis", "BigLittleEnergyModel", "Cell", "Controller", "ControllerInit",
+    "EnergyModel", "Environment", "Experiment", "FleetReport", "Host",
+    "IsmailTargetController", "LossyWanNetworkModel", "NetworkModel",
+    "ReferenceEnergyModel", "ReferenceNetworkModel", "Report", "Scenario",
+    "StaticBaselineController", "TransferRequest", "TransferResult",
+    "TuneResult", "TunerController", "as_controller", "as_environment",
+    "axis", "chain", "clear_cache", "crn_bw_schedule", "fingerprint",
+    "grid", "group_count", "host_pool", "list_controllers",
     "list_energy_models", "list_environments", "list_network_models",
     "make_controller", "make_energy_model", "make_environment",
     "make_network_model", "poisson_trace", "register_controller",
     "register_energy_model", "register_environment",
-    "register_network_model", "replay_trace", "run", "run_fleet", "sweep",
+    "register_network_model", "replay_trace", "run", "run_fleet",
+    "scenario_key", "sweep", "tune", "zip_",
 ]

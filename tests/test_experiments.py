@@ -1,0 +1,331 @@
+"""Tests for the declarative Experiment/Report surface
+(repro.api.experiments / repro.api.report): space composition, scenario
+building, derived metrics, JSON round-trips, and content-hash caching."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import CpuProfile
+from repro.core.types import CHAMELEON, CLOUDLAB, DatasetSpec
+
+CPU = CpuProfile()
+
+# Small synthetic partitions so one run is ~1-2k scan steps (mirrors
+# test_api.FAST so the engine's per-process runner cache is shared).
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+TOTAL_S = 120.0
+
+BASE = {"datasets": FAST, "cpu": CPU, "total_s": TOTAL_S}
+
+
+def small_experiment(tools=("wget/curl", "http/2")):
+    return api.Experiment(
+        name="t",
+        space=api.grid(
+            api.axis("testbed", {"chameleon": CHAMELEON,
+                                 "cloudlab": CLOUDLAB}, field="profile"),
+            api.axis("tool", tools)),
+        base=dict(BASE, controller=lambda c: c["tool"]))
+
+
+# ----------------------------------------------------------------- spaces --
+
+def test_axis_spellings():
+    a = api.axis("x", {"lo": 1, "hi": 2})
+    assert a.labels == ("lo", "hi") and a.values == (1, 2)
+    b = api.axis("x", [("lo", 1), ("hi", 2)])
+    assert b.labels == a.labels and b.values == a.values
+    c = api.axis("x", [1, 2.5, "s"])
+    assert c.labels == ("1", "2.5", "s")
+    d = api.axis("testbed", [CHAMELEON], field="profile")
+    assert d.labels == ("chameleon",)
+
+
+def test_axis_validation():
+    with pytest.raises(ValueError):
+        api.axis("x", [])
+    with pytest.raises(ValueError):
+        api.axis("x", [1], field="not-a-scenario-field")
+    with pytest.raises(ValueError):
+        api.Axis(name="x", labels=("a",), values=(1, 2))
+
+
+def test_grid_zip_chain_composition():
+    g = api.grid(api.axis("a", [1, 2]), api.axis("b", [3, 4, 5]))
+    assert len(g.cells()) == 6
+    z = api.zip_(api.axis("a", [1, 2]), api.axis("b", [3, 4]))
+    assert len(z.cells()) == 2
+    with pytest.raises(ValueError):
+        api.zip_(api.axis("a", [1, 2]), api.axis("b", [3])).cells()
+    ch = api.chain(api.grid(a=[1, 2], s=[True, False]), api.axis("a", [9]))
+    cells = ch.cells()
+    assert len(cells) == 5
+    assert "s" not in cells[-1]                # missing axis in chain tail
+    # grid x chain: the product distributes over the concatenation
+    outer = api.grid(api.axis("t", ["x", "y"]), ch)
+    assert len(outer.cells()) == 10
+    assert outer.axis_names() == ("t", "a", "s")
+
+
+def test_grid_kwarg_shorthand():
+    g = api.grid(tool=["ME", "EEMT"])
+    assert [c["tool"][0] for c in g.cells()] == ["ME", "EEMT"]
+
+
+# ------------------------------------------------------------ experiments --
+
+def test_experiment_cells_bind_fields_and_names():
+    exp = small_experiment()
+    cells = exp.cells()
+    assert len(cells) == 4
+    sc = cells[0].scenario
+    assert sc.profile is CHAMELEON and sc.datasets == FAST
+    assert sc.total_s == TOTAL_S
+    assert sc.name == "t/chameleon/wget/curl"
+    assert cells[0].labels == {"testbed": "chameleon", "tool": "wget/curl"}
+    # callables see the axis value under BOTH the axis and field name
+    exp2 = api.Experiment(
+        name="t", space=api.axis("testbed", [CHAMELEON], field="profile"),
+        base=dict(BASE, controller="wget/curl",
+                  total_s=lambda c: 60.0 if c["profile"] is CHAMELEON
+                  else 1.0))
+    assert exp2.cells()[0].scenario.total_s == 60.0
+
+
+def test_experiment_rejects_unknown_base_field():
+    with pytest.raises(ValueError):
+        api.Experiment(name="t", space=api.axis("tool", ["ME"]),
+                       base={"not_a_field": 1})
+
+
+def test_scenario_key_normalizes_spellings():
+    sc_name = api.Scenario(profile=CHAMELEON, datasets=FAST,
+                           controller="wget/curl", cpu=CPU, total_s=TOTAL_S)
+    sc_inst = api.Scenario(profile=CHAMELEON, datasets=FAST,
+                           controller=api.make_controller("wget/curl"),
+                           cpu=CPU, total_s=TOTAL_S, name="labelled")
+    assert api.scenario_key(sc_name) == api.scenario_key(sc_inst)
+    sc_other = api.Scenario(profile=CHAMELEON, datasets=FAST,
+                            controller="http/2", cpu=CPU, total_s=TOTAL_S)
+    assert api.scenario_key(sc_name) != api.scenario_key(sc_other)
+    # numeric hyper-parameters reach the key
+    a = api.Scenario(profile=CHAMELEON, datasets=FAST,
+                     controller=api.make_controller("eemt", max_ch=16),
+                     cpu=CPU, total_s=TOTAL_S)
+    b = api.Scenario(profile=CHAMELEON, datasets=FAST,
+                     controller=api.make_controller("eemt", max_ch=32),
+                     cpu=CPU, total_s=TOTAL_S)
+    assert api.scenario_key(a) != api.scenario_key(b)
+
+
+# ----------------------------------------------------------------- report --
+
+@pytest.fixture(scope="module")
+def small_report():
+    return small_experiment().run()
+
+
+def test_report_rows_match_run(small_report):
+    """Report rows are exactly the sweep's TransferResults (which are in
+    turn bit-identical to api.run — regression-tested in test_api)."""
+    cells = small_experiment().cells()
+    assert len(small_report) == len(cells)
+    for cell, row in zip(cells, small_report.rows()):
+        res = api.run(cell.scenario)
+        for m in ("completed", "time_s", "energy_j", "avg_tput_MBps",
+                  "avg_tput_gbps", "avg_power_w"):
+            assert row[m] == float(getattr(res, m)), (cell.labels, m)
+
+
+def test_report_derived_metrics_hand_computed(small_report):
+    r = small_report
+    for row in r.rows():
+        moved = row["avg_tput_MBps"] * row["time_s"]
+        assert row["moved_mb"] == moved
+        assert row["gb"] == moved / 1024.0
+        assert row["joules_per_gb"] == \
+            row["energy_j"] / max(moved / 1024.0, 1e-9)
+        assert row["edp"] == row["energy_j"] * row["time_s"]
+
+
+def test_report_json_roundtrip_bit_exact(small_report, tmp_path):
+    path = str(tmp_path / "r.json")
+    small_report.to_json(path)
+    back = api.Report.from_json(path)
+    assert back.axes == small_report.axes
+    assert back.columns == small_report.columns
+    for name in small_report.columns:
+        col_a, col_b = small_report[name], back[name]
+        if name in small_report.axes:
+            assert list(col_a) == list(col_b)
+        else:
+            # bit-exact: json floats serialize via repr (shortest
+            # round-trip form)
+            assert np.array_equal(col_a, col_b), name
+    assert back.meta == small_report.meta
+    # and the text itself is a fixed point
+    assert back.to_json() == small_report.to_json()
+
+
+def test_report_select_and_group_by(small_report):
+    sel = small_report.select(testbed="chameleon")
+    assert len(sel) == 2 and set(sel["testbed"]) == {"chameleon"}
+    pred = small_report.select(energy_j=lambda e: e > 0)
+    assert len(pred) == len(small_report)
+    g = small_report.group_by("tool")
+    assert g.axes == ("tool",) and len(g) == 2
+    for row in g.rows():
+        member = small_report.select(tool=row["tool"])["energy_j"]
+        assert row["energy_j"] == float(np.mean(member))
+        assert row["n"] == len(member)
+
+
+def test_report_vs_baseline():
+    r = api.Report({"tb": ["c", "c", "d", "d"],
+                    "tool": ["base", "x", "base", "x"],
+                    "energy_j": [100.0, 50.0, 200.0, 300.0]},
+                   axes=("tb", "tool"), derive=False)
+    vb = r.vs_baseline("tool", "base", metrics=("energy_j",))
+    np.testing.assert_allclose(vb["energy_j_vs_base"],
+                               [0.0, -50.0, 0.0, 50.0])
+
+
+def test_report_argbest():
+    r = api.Report({"tool": ["a", "b", "c"],
+                    "energy_j": [5.0, 1.0, 3.0],
+                    "avg_tput_gbps": [9.0, 1.0, 5.0]},
+                   axes=("tool",), derive=False)
+    assert r.argbest("energy_j")["tool"] == "b"
+    best = r.argbest("energy_j",
+                     where=lambda row: row["avg_tput_gbps"] >= 4.0)
+    assert best["tool"] == "c"
+    with pytest.raises(ValueError):
+        r.argbest("energy_j", where=lambda row: False)
+
+
+def test_group_by_of_grouped_report_is_stable():
+    r = api.Report({"tool": ["a", "a", "b"], "energy_j": [1.0, 3.0, 5.0]},
+                   axes=("tool",), derive=False)
+    g2 = r.group_by("tool").group_by("tool")
+    assert list(g2["tool"]) == ["a", "b"]
+    assert list(g2["energy_j"]) == [2.0, 5.0]
+    assert list(g2["n"]) == [1.0, 1.0]
+
+
+def test_cell_for_keeps_declared_labels():
+    """Off-grid rebuilds (tune's refine path) must keep the grid's
+    declared labels for declared values, not re-derive type names."""
+    exp = small_experiment()
+    cell = exp.cell_for({"testbed": CHAMELEON, "tool": "wget/curl"})
+    assert cell.labels == {"testbed": "chameleon", "tool": "wget/curl"}
+    assert cell.scenario.profile is CHAMELEON
+    grid_cell = next(c for c in exp.cells()
+                     if c.labels == cell.labels)
+    assert cell.key == grid_cell.key
+
+
+def test_cell_for_none_skips_field_binding():
+    """None = chain-missing axis: the bound Scenario field must fall back
+    to base, not be overridden with None."""
+    exp = api.Experiment(
+        name="t",
+        space=api.chain(
+            api.axis("budget", [60.0], field="total_s"),
+            api.axis("tool", ["http/2"])),
+        base=dict(BASE, profile=CHAMELEON,
+                  controller=lambda c: c["tool"] or "wget/curl"))
+    cell = exp.cell_for({"budget": None, "tool": "http/2"})
+    assert cell.labels == {"budget": "", "tool": "http/2"}
+    assert cell.scenario.total_s == TOTAL_S      # base, not None
+    assert cell.scenario.controller == "http/2"
+
+
+def test_report_from_dict_rejects_other_schemas():
+    with pytest.raises(ValueError):
+        api.Report.from_dict({"schema": "something/else", "axes": [],
+                              "columns": {}})
+
+
+def test_report_none_loads_as_nan():
+    r = api.Report({"tool": ["a"], "p99": [None]}, axes=("tool",),
+                   derive=False)
+    assert np.isnan(r["p99"][0])
+    back = api.Report.from_json(r.to_json())
+    assert np.isnan(back["p99"][0])
+
+
+# ------------------------------------------------------------------ cache --
+
+def test_cache_hit_and_resume(tmp_path):
+    cache = str(tmp_path / "cells")
+    calls = []
+
+    def spy(scenarios):
+        calls.append(len(scenarios))
+        return api.sweep(scenarios)
+
+    exp = small_experiment()
+    r1 = exp.run(cache=cache, sweeper=spy)
+    assert calls == [4]
+    assert r1.meta["cache_hits"] == 0 and r1.meta["executed"] == 4
+
+    # unchanged grid: served entirely from cache — ZERO sweep calls
+    r2 = exp.run(cache=cache, sweeper=spy)
+    assert calls == [4]
+    assert r2.meta["cache_hits"] == 4 and r2.meta["executed"] == 0
+    for m in r1.metrics:
+        assert np.array_equal(r1[m], r2[m]), m
+
+    # resume: drop one cell record -> exactly one scenario re-executes
+    victim = sorted(os.listdir(cache))[0]
+    os.remove(os.path.join(cache, victim))
+    r3 = exp.run(cache=cache, sweeper=spy)
+    assert calls == [4, 1]
+    assert r3.meta["cache_hits"] == 3 and r3.meta["executed"] == 1
+    for m in r1.metrics:
+        assert np.array_equal(r1[m], r3[m]), m
+
+
+def test_cache_keys_are_spec_not_identity(tmp_path):
+    """A freshly constructed but identical Experiment hits the cache."""
+    cache = str(tmp_path / "cells")
+    calls = []
+
+    def spy(scenarios):
+        calls.append(len(scenarios))
+        return api.sweep(scenarios)
+
+    small_experiment().run(cache=cache, sweeper=spy)
+    small_experiment().run(cache=cache, sweeper=spy)
+    assert calls == [4]
+
+
+def test_cache_version_mismatch_reexecutes(tmp_path):
+    cache = str(tmp_path / "cells")
+    exp = small_experiment()
+    exp.run(cache=cache)
+    # corrupt one record's version: it must be ignored, not trusted
+    name = sorted(os.listdir(cache))[0]
+    path = os.path.join(cache, name)
+    payload = json.load(open(path))
+    payload["version"] = "something/old"
+    json.dump(payload, open(path, "w"))
+    r = exp.run(cache=cache)
+    assert r.meta["executed"] == 1 and r.meta["cache_hits"] == 3
+
+
+def test_clear_cache(tmp_path):
+    cache = str(tmp_path / "cells")
+    small_experiment().run(cache=cache)
+    assert api.clear_cache(cache) == 4
+    assert api.clear_cache(cache) == 0
+    assert api.clear_cache(str(tmp_path / "missing")) == 0
+
+
+# Hypothesis property tests for the Report layer live in
+# tests/test_report_properties.py (module-level importorskip guard, like
+# the other property-test modules).

@@ -1,0 +1,56 @@
+"""Hypothesis property tests for the Report layer: derived metrics match
+the hand formulas on arbitrary finite inputs, and to_json/from_json
+round-trips bit-exactly."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+
+finite = st.floats(min_value=1e-6, max_value=1e12, allow_nan=False,
+                   allow_infinity=False)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.tuples(finite, finite, finite), min_size=1, max_size=20))
+def test_derived_metrics_formulas(rows):
+    cols = {"cell": [str(i) for i in range(len(rows))],
+            "time_s": [r[0] for r in rows],
+            "energy_j": [r[1] for r in rows],
+            "avg_tput_MBps": [r[2] for r in rows]}
+    rep = api.Report(cols, axes=("cell",))
+    for i, (t, e, mbps) in enumerate(rows):
+        moved = np.float64(mbps) * np.float64(t)
+        assert rep["moved_mb"][i] == moved
+        assert rep["gb"][i] == moved / 1024.0
+        assert rep["joules_per_gb"][i] == \
+            np.float64(e) / np.maximum(moved / 1024.0, 1e-9)
+        assert rep["edp"][i] == np.float64(e) * np.float64(t)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=30))
+def test_json_roundtrip_bit_exact(values):
+    rep = api.Report({"cell": [str(i) for i in range(len(values))],
+                      "metric_s": values}, axes=("cell",), derive=False)
+    back = api.Report.from_json(rep.to_json())
+    assert np.array_equal(rep["metric_s"], back["metric_s"])
+    assert back.to_json() == rep.to_json()
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(finite, min_size=2, max_size=16),
+       st.integers(min_value=2, max_value=4))
+def test_group_by_mean_matches_numpy(values, n_groups):
+    labels = [str(i % n_groups) for i in range(len(values))]
+    rep = api.Report({"g": labels, "metric_s": values}, axes=("g",),
+                     derive=False)
+    grouped = rep.group_by("g")
+    for row in grouped.rows():
+        member = np.asarray([v for lab, v in zip(labels, values)
+                             if lab == row["g"]], np.float64)
+        assert row["metric_s"] == float(np.mean(member))
+        assert row["n"] == len(member)

@@ -1,0 +1,175 @@
+"""Tests for offline auto-tuning (repro.api.tuning): successive halving
+finds the grid argmin, constraints gate the winner, CRN pairing makes
+repeated searches bit-deterministic, and grid-refine stays inside the
+winner's bracket."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import CpuProfile
+from repro.core.types import CHAMELEON, DatasetSpec
+
+CPU = CpuProfile()
+
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+TOTAL_S = 120.0
+
+MAX_CH = (4, 16, 64)
+
+
+def tune_experiment():
+    return api.Experiment(
+        name="tune-t",
+        space=api.grid(api.axis("max_ch", MAX_CH)),
+        base={"datasets": FAST, "cpu": CPU, "total_s": TOTAL_S,
+              "profile": CHAMELEON,
+              "controller": lambda c: api.make_controller(
+                  "eemt", max_ch=c["max_ch"])})
+
+
+@pytest.fixture(scope="module")
+def exhaustive():
+    """The ground truth: every cell swept at full fidelity."""
+    return tune_experiment().run()
+
+
+def test_halving_returns_true_argmin(exhaustive):
+    """Deterministic scenarios -> every rung is exact -> successive halving
+    must return the exhaustive-sweep argmin."""
+    truth = exhaustive.argbest("energy_j")
+    res = api.tune(tune_experiment(), "energy_j")
+    assert res.best_labels["max_ch"] == truth["max_ch"]
+    assert res.best_value == truth["energy_j"]
+    assert res.feasible
+    # max mode too
+    truth_max = exhaustive.argbest("avg_tput_gbps", mode="max")
+    res_max = api.tune(tune_experiment(), "avg_tput_gbps", mode="max")
+    assert res_max.best_labels["max_ch"] == truth_max["max_ch"]
+
+
+# A transfer too big to drain inside the budget: energy integrates over
+# the full horizon, so min-energy (ME) and max-throughput (EEMT) genuinely
+# trade off instead of "fastest finish wins both axes".
+BIG = (DatasetSpec("big", 500, 200_000.0, 400.0),)
+
+
+def tradeoff_experiment():
+    return api.Experiment(
+        name="tradeoff-t",
+        space=api.grid(api.axis("ctrl", ("me", "eemt", "wget/curl"))),
+        base={"datasets": BIG, "cpu": CPU, "total_s": 60.0,
+              "profile": CHAMELEON, "controller": lambda c: c["ctrl"]})
+
+
+def test_constraint_gates_the_winner():
+    rows = tradeoff_experiment().run().rows()
+    unconstrained = min(rows, key=lambda r: r["energy_j"])
+    # Pick a throughput floor that excludes the unconstrained argmin but
+    # keeps at least one candidate feasible.
+    feas = [r for r in rows
+            if r["avg_tput_gbps"] > unconstrained["avg_tput_gbps"]]
+    assert feas, "grid too flat for a meaningful constraint test"
+    floor = (unconstrained["avg_tput_gbps"]
+             + min(r["avg_tput_gbps"] for r in feas)) / 2.0
+    truth = min((r for r in rows if r["avg_tput_gbps"] >= floor),
+                key=lambda r: r["energy_j"])
+    res = api.tune(tradeoff_experiment(), "energy_j",
+                   ("avg_tput_gbps", ">=", floor))
+    assert truth["ctrl"] != unconstrained["ctrl"]  # constraint is binding
+    assert res.best_labels["ctrl"] == truth["ctrl"]
+    assert res.feasible
+    assert res.best_metrics["avg_tput_gbps"] >= floor
+
+
+def test_infeasible_everywhere_is_flagged():
+    res = api.tune(tune_experiment(), "energy_j",
+                   ("avg_tput_gbps", ">=", 1e9))
+    assert not res.feasible
+
+
+def test_crn_pairing_makes_tune_deterministic():
+    a = api.tune(tune_experiment(), "energy_j", seeds=[7, 11, 13])
+    b = api.tune(tune_experiment(), "energy_j", seeds=[7, 11, 13])
+    assert a.best == b.best
+    assert a.best_value == b.best_value
+    assert a.n_evals == b.n_evals
+    assert len(a.report) == len(b.report)
+    for m in a.report.metrics:
+        assert np.array_equal(a.report[m], b.report[m]), m
+    for ax in a.report.axes:
+        assert list(a.report[ax]) == list(b.report[ax])
+
+
+def test_crn_schedules_are_common_not_per_candidate():
+    """The seed alone determines the schedule — candidates are paired."""
+    s1 = api.crn_bw_schedule(7, 1200)
+    s2 = api.crn_bw_schedule(7, 1200)
+    assert np.array_equal(s1, s2)
+    assert s1.shape == (1200,) and s1.dtype == np.float32
+    assert float(s1.min()) >= 0.55 and float(s1.max()) <= 1.0
+    assert not np.array_equal(s1, api.crn_bw_schedule(8, 1200))
+
+
+def test_halving_search_report_accounts_every_eval():
+    res = api.tune(tune_experiment(), "energy_j", seeds=[7, 11], eta=3)
+    # round 0: 3 candidates x 1 seed; round 1: winner x remaining seed
+    assert res.n_evals == len(res.report) == 4
+    assert set(res.report.axes) == {"max_ch", "seed", "round"}
+    # winner evaluated on every seed (full-fidelity final score)
+    winner = res.report.select(max_ch=res.best_labels["max_ch"])
+    assert sorted(winner["seed"]) == ["11", "7"]
+
+
+def test_refine_bisects_toward_better_configs(exhaustive):
+    res = api.tune(tune_experiment(), "energy_j", refine=2)
+    coarse = exhaustive.argbest("energy_j")
+    # refine may only improve (or hold) the objective, and the winning
+    # value stays inside the original grid's numeric range
+    assert res.best_value <= coarse["energy_j"]
+    assert MAX_CH[0] <= res.best["max_ch"] <= MAX_CH[-1]
+    # integer axis stays integer
+    assert isinstance(res.best["max_ch"], int)
+
+
+def test_refine_survives_chain_winner_without_numeric_axis():
+    """A chain() sub-space winner may lack the numeric axis entirely; the
+    refine phase must skip it instead of crashing on float(None)."""
+    exp = api.Experiment(
+        name="chain-t",
+        space=api.chain(
+            api.grid(api.axis("ctrl", ("eemt",)),
+                     api.axis("max_ch", (8, 16))),
+            api.axis("ctrl", ("me",))),
+        base={"datasets": BIG, "cpu": CPU, "total_s": 60.0,
+              "profile": CHAMELEON,
+              "controller": lambda c: api.make_controller(
+                  c["ctrl"], **({} if c["max_ch"] is None
+                                else {"max_ch": c["max_ch"]}))})
+    res = api.tune(exp, "energy_j", refine=2)
+    # ME wins on energy over the incomplete transfer (it has no max_ch axis)
+    assert res.best_labels["ctrl"] == "me"
+    assert res.best["max_ch"] is None
+    assert res.feasible
+
+
+def test_tune_cache_serves_repeat_searches(tmp_path):
+    cache = str(tmp_path / "cells")
+    calls = []
+
+    def spy(scenarios):
+        calls.append(len(scenarios))
+        return api.sweep(scenarios)
+
+    api.tune(tune_experiment(), "energy_j", sweeper=spy, cache=cache)
+    first = list(calls)
+    api.tune(tune_experiment(), "energy_j", sweeper=spy, cache=cache)
+    assert calls == first        # second search: zero new sweep calls
+
+
+def test_tune_validates_inputs():
+    with pytest.raises(ValueError):
+        api.tune(tune_experiment(), "energy_j", mode="sideways")
+    with pytest.raises(ValueError):
+        api.tune(tune_experiment(), "energy_j",
+                 ("avg_tput_gbps", "~=", 1.0))

@@ -76,7 +76,14 @@ def compare(baseline: dict, current: dict, tolerance_pct: float) -> list:
             failures.append(f"{name}: missing from current record")
             continue
         cur = float(current[name])
-        if _direction(name) == "lower":
+        try:
+            direction = _direction(name)
+        except ValueError as e:
+            # A baseline metric the gate cannot orient is a configuration
+            # error, not a crash: fail it with the explanation.
+            failures.append(f"{name}: {e}")
+            continue
+        if direction == "lower":
             limit = base * (1.0 + tol)
             ok = cur <= limit
             change = (cur / base - 1.0) * 100.0 if base else float("inf")
@@ -92,7 +99,12 @@ def compare(baseline: dict, current: dict, tolerance_pct: float) -> list:
             failures.append(f"{name}: {change:+.1f}% past the "
                             f"{tolerance_pct:.0f}% tolerance")
     for name in sorted(set(current) - set(baseline)):
-        print(f"{name}: current={float(current[name]):.3f} [new]")
+        # A gated metric the baseline has never seen must not KeyError or
+        # fail the gate — that is how new benchmarks join the trajectory.
+        # It starts gating once --rebaseline copies it into the baseline.
+        tag = ("new metric, no baseline — gated after --rebaseline"
+               if name.endswith(GATED_SUFFIX) else "new")
+        print(f"{name}: current={float(current[name]):.3f} [{tag}]")
     return failures
 
 
@@ -107,8 +119,12 @@ def compare_reports(baseline: dict, current: dict) -> list:
 
     failures = []
     for name in sorted(set(baseline) & set(current)):
-        base_r = Report.from_dict(baseline[name])
-        cur_r = Report.from_dict(current[name])
+        try:
+            base_r = Report.from_dict(baseline[name])
+            cur_r = Report.from_dict(current[name])
+        except Exception as e:
+            failures.append(f"report:{name}: unreadable payload ({e})")
+            continue
         if "completed" not in base_r.columns or \
                 "completed" not in cur_r.columns:
             continue

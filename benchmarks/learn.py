@@ -1,0 +1,130 @@
+"""Learned-controller benchmark: train a BC policy, score it.
+
+    PYTHONPATH=src python -m benchmarks.learn [--smoke]
+
+Trains a behavior-cloning policy against the EEMT tuner on the fig2 smoke
+cells (capture + fit take a few seconds on CPU), then scores it against
+the heuristic line-up (ME / EEMT / EETT / wget-curl) on the fig2-style
+grid and drops it into a small mixed-controller fleet trace.  Both results
+are emitted as ``repro.api.Report`` payloads so the BENCH record's
+completion-parity gate covers learned controllers like any figure grid.
+
+Rows: learn/<testbed>/<dataset>/<tool>,us_per_cell,"<J>;<MB/s>;done=<0|1>"
+plus a ``learn/train`` row with the capture + fit wall time.
+"""
+from __future__ import annotations
+
+import time
+
+from repro import api, fleet, learn
+from repro.core.types import CHAMELEON, GB, DatasetSpec, MIXED, SMALL_FILES
+
+from .common import emit
+
+TEACHER_NAME = "EEMT"
+BC_STEPS = 400
+SEED = 0
+
+# Fleet-smoke menu: transfer sizes long enough for controller ticks to
+# matter at the fleet dt, small enough that the trace drains in seconds.
+FLEET_DATASETS = (
+    (DatasetSpec("web", 20_000, 2.0 * GB, 0.1),),
+    (DatasetSpec("data", 2_500, 8.0 * GB, 2.4),),
+)
+
+
+def train(smoke: bool = True) -> tuple:
+    """Capture EEMT rollouts on the fig2 smoke cells and clone them.
+
+    Returns ``(learned_controller, record)`` where the record carries the
+    dataset size, losses, and capture/fit wall clocks.
+    """
+    teacher = api.make_controller(TEACHER_NAME, max_ch=64)
+    cells = [api.Scenario(profile=CHAMELEON, datasets=ds,
+                          controller=teacher, total_s=900.0, dt=0.1)
+             for ds in ((SMALL_FILES,), MIXED)]
+    t0 = time.perf_counter()
+    feats, labels = learn.teacher_dataset(cells)
+    capture_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    params, hist = learn.bc_train(feats, labels,
+                                  key=learn.seed_everything(SEED),
+                                  steps=BC_STEPS)
+    train_s = time.perf_counter() - t0
+    learned = learn.LearnedController(params=params, sla=teacher.sla,
+                                      label="learned")
+    record = {
+        "teacher": TEACHER_NAME,
+        "samples": int(feats.shape[0]),
+        "loss_first": float(hist["loss"][0]),
+        "loss_last": float(hist["loss"][-1]),
+        "capture_s": capture_s,
+        "train_s": train_s,
+    }
+    return learned, record
+
+
+def fleet_smoke(learned) -> "api.Report":
+    """A small mixed trace with the learned policy in the controller menu —
+    the fleet path must treat it like any heuristic."""
+    from . import fleet as fleet_bench
+
+    menu = (learned, "EEMT", "wget/curl")
+    trace = fleet.poisson_trace(rate_per_s=0.3, n_transfers=120, seed=7,
+                                datasets=FLEET_DATASETS, controllers=menu,
+                                profile=CHAMELEON, total_s=1800.0)
+    hosts = fleet.host_pool(4, nic_mbps=CHAMELEON.bandwidth_mbps, slots=16)
+    report = fleet.run_fleet(trace, hosts, wave_s=15.0, dt=0.5)
+    return fleet_bench.controller_report(report)
+
+
+def run(smoke: bool = True, warm: bool = False, timing: str = "split") -> dict:
+    """Train, score on the grid, drop into the fleet.  ``warm=True`` adds
+    best-of-3 steady-state eval walls (runners cached) for the perf gate."""
+    learned, train_rec = train(smoke)
+    emit("learn/train", train_rec["capture_s"] + train_rec["train_s"],
+         f"samples={train_rec['samples']};"
+         f"loss={train_rec['loss_last']:.4f}")
+
+    report = learn.evaluate(learned, smoke=smoke, timing=timing)
+    n_cells = len(report)
+    grid_s = report.meta.get("warm_wall_s", report.meta.get("wall_s", 0.0))
+    for row in report.rows():
+        emit(f"learn/{row['testbed']}/{row['dataset']}/{row['tool']}",
+             grid_s / max(n_cells, 1),
+             f"{row['energy_j']:.1f}J;{row['avg_tput_MBps']:.0f}MB/s;"
+             f"done={int(row['completed'])}")
+
+    record = dict(train_rec)
+    record["report"] = report.to_dict()
+    record["vs_teacher"] = learn.vs_teacher(report, TEACHER_NAME)
+    if "compile_s" in report.meta:
+        record["compile_s"] = report.meta["compile_s"]
+
+    if warm:
+        walls = [grid_s]
+        for _ in range(2):
+            r = learn.evaluate(learned, smoke=smoke, timing="cold")
+            walls.append(r.meta["wall_s"])
+        record["eval_warm_wall_s"] = min(walls)
+        record["eval_cells_per_sec"] = n_cells / max(min(walls), 1e-9)
+
+    fleet_report = fleet_smoke(learned)
+    record["fleet_report"] = fleet_report.to_dict()
+    for row in fleet_report.rows():
+        emit(f"learn/fleet/{row['controller']}", 0.0,
+             f"{row['joules_per_gb']:.1f}J/GB;"
+             f"n={row['transfers']:.0f};done={row['completed']:.0f}")
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+    rec = run(smoke=args.smoke)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("report", "fleet_report")}, indent=2))

@@ -1,7 +1,7 @@
 """Benchmark harness entry point: one module per paper figure/table.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fig2,fig3,fig4,micro,roofline,fleet] [--smoke] \
+        [--only fig2,fig3,fig4,micro,roofline,fleet,learn] [--smoke] \
         [--json BENCH_perf.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark cell) and a
@@ -28,7 +28,8 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig2,fig3,fig4,micro,roofline,fleet")
+    ap.add_argument("--only",
+                    default="fig2,fig3,fig4,micro,roofline,fleet,learn")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grids for fig2/fleet")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -102,6 +103,27 @@ def main() -> None:
         summary["fleet"] = {k: frec[k] for k in
                             ("transfers", "completed", "joules_per_gb",
                              "slowdown")}
+
+    if "learn" in only:
+        from . import learn as learn_bench
+        prefix = "learn_smoke" if args.smoke else "learn"
+        t0 = time.perf_counter()
+        lrec = learn_bench.run(smoke=args.smoke,
+                               warm=args.json is not None)
+        bench[f"{prefix}_wall_s"] = time.perf_counter() - t0
+        bench[f"{prefix}_train_s"] = lrec["train_s"]
+        if "compile_s" in lrec:
+            bench[f"{prefix}_compile_s"] = lrec["compile_s"]
+        if args.json is not None:
+            bench[f"{prefix}_eval_warm_wall_s"] = lrec["eval_warm_wall_s"]
+            bench[f"{prefix}_eval_cells_per_sec"] = \
+                lrec["eval_cells_per_sec"]
+        reports[prefix] = lrec["report"]
+        reports[f"{prefix}_fleet"] = lrec["fleet_report"]
+        summary["learn"] = {"teacher": lrec["teacher"],
+                            "samples": lrec["samples"],
+                            "loss_last": lrec["loss_last"],
+                            "vs_teacher": lrec["vs_teacher"]}
 
     if args.json is not None:
         record = {

@@ -135,6 +135,35 @@ class ScanInputs(NamedTuple):
         )
 
 
+class Observation(NamedTuple):
+    """Per-tick rollout capture, emitted only when the engine is built with
+    ``observe=True`` (the learned-controller training hook).
+
+    Window quantities (``avg_tput``, ``avg_power``) are computed from the
+    controller accumulators with the exact expressions of
+    :func:`_controller_tick`, so at controller ticks (``is_ctrl``) they are
+    bit-identical to the ``Measurement`` the controller saw.  The operating
+    point (``num_ch``/``cores``/``freq_idx``) is recorded *pre-decision* and
+    the ``d_*`` fields hold the delta the controller applied this tick
+    (zero off controller ticks).  Everything is masked to zero once the
+    transfer completes, mirroring ``TickMetrics``.
+    """
+
+    avg_tput: jnp.ndarray      # [] f32 MB/s over the accumulation window
+    avg_power: jnp.ndarray     # [] f32 W over the accumulation window
+    cpu_load: jnp.ndarray      # [] f32 utilisation of the active cores
+    remaining_mb: jnp.ndarray  # [] f32 bytes left across partitions
+    num_ch: jnp.ndarray        # [] f32 channel budget, pre-decision
+    cores: jnp.ndarray         # [] i32 active cores, pre-decision
+    freq_idx: jnp.ndarray      # [] i32 frequency index, pre-decision
+    bw_scale: jnp.ndarray      # [] f32 contention share of nominal bandwidth
+    d_num_ch: jnp.ndarray      # [] f32 channel delta applied this tick
+    d_cores: jnp.ndarray       # [] i32 core delta applied this tick
+    d_freq_idx: jnp.ndarray    # [] i32 frequency delta applied this tick
+    is_ctrl: jnp.ndarray       # [] bool controller ticked (and transfer live)
+    live: jnp.ndarray          # [] bool transfer still moving bytes
+
+
 def _controller_tick(controller, ts: TunerState, sim, load, net, cpu,
                      sla) -> TunerState:
     """Assemble the interval measurement, delegate to the controller, reset
@@ -153,7 +182,8 @@ def _controller_tick(controller, ts: TunerState, sim, load, net, cpu,
 
 
 def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
-                 dt: float, ctrl_every: int, n_steps: Optional[int] = None):
+                 dt: float, ctrl_every: int, n_steps: Optional[int] = None,
+                 observe: bool = False):
     """Build the scan step.  ``controller`` supplies the jittable algorithm
     semantics, ``env`` (a ``repro.api`` Environment) the jittable physics;
     static metadata (cpu, dt, ctrl_every) is closed over.
@@ -163,6 +193,12 @@ def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
     whole number of chunks; padding ticks are frozen no-ops).  Non-live
     ticks freeze the whole carry — including ``energy_j`` and ``t`` — and
     emit zeroed metrics, so post-completion ticks are pure padding.
+
+    With ``observe=True`` the step additionally emits an :class:`Observation`
+    per tick (``(metrics, obs)`` instead of ``metrics``) for the
+    ``repro.learn`` rollout harness.  The flag is resolved at trace time, so
+    the default path compiles to exactly the program it did before the hook
+    existed — zero overhead when disabled.
     """
 
     def step(carry, xs):
@@ -191,6 +227,7 @@ def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
             acc_j=ts.acc_j + out.power_w * dt * live,
             acc_s=ts.acc_s + dt * live,
         )
+        ts_pre = ts  # post-accumulation, pre-decision (what the tick sees)
 
         if controller.tunes:
             is_ctrl = jnp.logical_and(
@@ -199,6 +236,8 @@ def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
                                       inp.net, cpu, inp.sla)
             ts = jax.tree.map(lambda n, o: jnp.where(is_ctrl, n, o),
                               ts_new, ts)
+        else:
+            is_ctrl = jnp.zeros((), jnp.bool_)
 
         _, f = env.energy.operating_point(cpu, ts.cores, ts.freq_idx)
         zi = jnp.zeros((), jnp.int32)
@@ -210,7 +249,26 @@ def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
             # Recorded POST-step: True from the tick the transfer drained.
             done=jnp.sum(sim2.remaining_mb) <= 0.0,
         )
-        return (sim2, ts), metrics
+        if not observe:
+            return (sim2, ts), metrics
+
+        win_s = jnp.maximum(ts_pre.acc_s, 1e-6)
+        obs = Observation(
+            avg_tput=(ts_pre.acc_mb / win_s) * live,
+            avg_power=(ts_pre.acc_j / win_s) * live,
+            cpu_load=out.cpu_load * live,
+            remaining_mb=jnp.sum(sim2.remaining_mb) * live,
+            num_ch=ts_pre.num_ch * live,
+            cores=jnp.where(live, ts_pre.cores, zi),
+            freq_idx=jnp.where(live, ts_pre.freq_idx, zi),
+            bw_scale=jnp.asarray(bw_scale, jnp.float32) * live,
+            d_num_ch=(ts.num_ch - ts_pre.num_ch) * live,
+            d_cores=jnp.where(live, ts.cores - ts_pre.cores, zi),
+            d_freq_idx=jnp.where(live, ts.freq_idx - ts_pre.freq_idx, zi),
+            is_ctrl=is_ctrl,
+            live=live,
+        )
+        return (sim2, ts), (metrics, obs)
 
     return step
 
@@ -229,9 +287,24 @@ def _init_metrics_buffer(padded: int) -> TickMetrics:
     )
 
 
+def _init_obs_buffer(padded: int) -> Observation:
+    """Observations for never-executed ticks: all-zero / not-live, exactly
+    what the masked step emits post-completion (keeps ``observe=True``
+    early-exit bit-identical to the full-horizon scan)."""
+    z = jnp.zeros((padded,), jnp.float32)
+    zi = jnp.zeros((padded,), jnp.int32)
+    zb = jnp.zeros((padded,), jnp.bool_)
+    return Observation(
+        avg_tput=z, avg_power=z, cpu_load=z, remaining_mb=z,
+        num_ch=z, cores=zi, freq_idx=zi, bw_scale=z,
+        d_num_ch=z, d_cores=zi, d_freq_idx=zi,
+        is_ctrl=zb, live=zb,
+    )
+
+
 def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
                ctrl_every: int, early_exit: bool = True,
-               chunk: Optional[int] = None):
+               chunk: Optional[int] = None, observe: bool = False):
     """One full transfer: ScanInputs -> (final SimState, TunerState, traces).
 
     Pure and shape-stable in its pytree argument, hence vmap-able across a
@@ -240,6 +313,10 @@ def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
     once every lane of the batch is done; metrics land in a preallocated
     [n_steps] buffer via ``dynamic_update_slice`` so the output shape is
     identical to the reference full-horizon scan (``early_exit=False``).
+
+    With ``observe=True`` the core returns ``(sim, ts, metrics, obs)`` where
+    ``obs`` is an [n_steps]-shaped :class:`Observation` trace; without it,
+    the classic ``(sim, ts, metrics)`` triple (and an unchanged program).
     """
     if chunk is None:
         chunk = max(MIN_CHUNK, -(-n_steps // MAX_CHUNKS))
@@ -251,12 +328,15 @@ def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
         sim0 = env.network.init_state(inp.total_mb, inp.net)
         step = make_step_fn(controller, env, cpu, inp, dt=dt,
                             ctrl_every=ctrl_every,
-                            n_steps=n_steps if padded != n_steps else None)
+                            n_steps=n_steps if padded != n_steps else None,
+                            observe=observe)
 
         if not early_exit:
             xs = (jnp.arange(n_steps, dtype=jnp.int32), inp.bw)
-            (sim, ts), metrics = jax.lax.scan(step, (sim0, inp.state0), xs)
-            return sim, ts, metrics
+            (sim, ts), ys = jax.lax.scan(step, (sim0, inp.state0), xs)
+            if observe:
+                return sim, ts, ys[0], ys[1]
+            return sim, ts, ys
 
         bw = jnp.pad(inp.bw, ((0, padded - n_steps),))
 
@@ -277,11 +357,15 @@ def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
                 buf, m)
             return k + 1, state, buf
 
-        carry0 = (jnp.zeros((), jnp.int32), (sim0, inp.state0),
-                  _init_metrics_buffer(padded))
+        buf0 = _init_metrics_buffer(padded)
+        if observe:
+            buf0 = (buf0, _init_obs_buffer(padded))
+        carry0 = (jnp.zeros((), jnp.int32), (sim0, inp.state0), buf0)
         _, (sim, ts), buf = jax.lax.while_loop(cond, body, carry0)
-        metrics = jax.tree.map(lambda b: b[:n_steps], buf)
-        return sim, ts, metrics
+        out = jax.tree.map(lambda b: b[:n_steps], buf)
+        if observe:
+            return sim, ts, out[0], out[1]
+        return sim, ts, out
 
     return core
 
@@ -289,7 +373,8 @@ def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
 @functools.lru_cache(maxsize=None)
 def get_runner(controller_code, env_code, cpu: CpuProfile, n_steps: int,
                dt: float, ctrl_every: int, batched: bool,
-               early_exit: bool = True, chunk: Optional[int] = None):
+               early_exit: bool = True, chunk: Optional[int] = None,
+               observe: bool = False):
     """Jitted (and optionally vmapped) engine core, cached per code group.
 
     ``controller_code`` must be a canonical (numerics-stripped, hashable)
@@ -301,7 +386,7 @@ def get_runner(controller_code, env_code, cpu: CpuProfile, n_steps: int,
     """
     core = build_core(controller_code, env_code, cpu, n_steps=n_steps, dt=dt,
                       ctrl_every=ctrl_every, early_exit=early_exit,
-                      chunk=chunk)
+                      chunk=chunk, observe=observe)
     if batched:
         core = jax.vmap(core)
     return jax.jit(core)

@@ -1,0 +1,31 @@
+"""repro.learn — train transfer-tuning policies in the simulator.
+
+The pipeline (see README "Learned controllers"):
+
+1. **Capture** teacher rollouts through the engine's ``observe=True`` hook
+   (:func:`teacher_dataset`) — every controller tick of an ME/EEMT/EETT
+   run becomes a (normalized observation, action delta) pair.
+2. **Train** with behavior cloning (:func:`bc_train`) and optionally
+   refine with REINFORCE on energy·delay (:func:`pg_train`), both on
+   ``repro.optim.adamw`` with explicit ``jax.random`` keys
+   (:func:`seed_everything`).
+3. **Deploy** as a :class:`LearnedController` —
+   ``api.make_controller("learned", params=...)`` — which flows through
+   ``Scenario.run/sweep``, Experiments, and fleets like any built-in
+   controller; params checkpoint via :func:`save_policy` /
+   :func:`load_policy` (``repro.ckpt``).
+4. **Score** against the heuristics on the fig2-style grid
+   (:func:`evaluate`).
+"""
+from .controller import (LearnedController, canonical_params,  # noqa: F401
+                         load_policy, params_digest, save_policy)
+from .evaluate import (default_rivals, evaluate,  # noqa: F401
+                       evaluation_experiment, vs_teacher)
+from .policy import (HEADS, N_CLASSES, N_FEATURES, N_HEADS,  # noqa: F401
+                     PolicyConfig, action_classes, apply_action,
+                     apply_policy, config_from_params, featurize,
+                     init_policy)
+from .rollout import (make_policy_rollout, n_ctrl_ticks,  # noqa: F401
+                      run_observed, teacher_dataset)
+from .train import (PGConfig, bc_train, pg_train,  # noqa: F401
+                    seed_everything)

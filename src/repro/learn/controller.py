@@ -1,0 +1,171 @@
+"""LearnedController: trained policy params behind the Controller protocol.
+
+The engine compiles one executable per ``Controller.code()`` — all
+per-scenario numerics flow through the traced ``ScanInputs``, and the
+``ScanInputs`` pytree has no slot for policy weights.  A learned
+controller's weights therefore legitimately *select code*: ``code()``
+returns a canonical instance that still carries the params (baked into the
+executable as XLA constants), and equality/hashing go by a content digest
+of the weights — two controllers with bit-identical params share one
+compiled runner, retrained params get a fresh one, and stale Experiment
+cache cells can never be served for new weights (``scenario_key`` hashes
+the same content).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.controllers import ControllerInit
+from repro.core import heuristics, tuners
+from repro.core.types import SLA, SLAParams
+
+from .policy import (PolicyConfig, apply_action, apply_policy,
+                     config_from_params, featurize, init_policy)
+
+
+def canonical_params(params) -> dict:
+    """Flatten to a plain ``{name: float32 ndarray}`` dict (host-side)."""
+    if not isinstance(params, dict):
+        raise TypeError(f"policy params must be a dict pytree, "
+                        f"got {type(params).__name__}")
+    return {str(k): np.asarray(v, np.float32) for k, v in params.items()}
+
+
+def params_digest(params) -> str:
+    """Content hash of a params dict: name, shape, and exact bytes."""
+    h = hashlib.sha256()
+    for name in sorted(params):
+        a = np.ascontiguousarray(np.asarray(params[name], np.float32))
+        h.update(name.encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LearnedController:
+    """A trained (or freshly initialized) policy as a Controller.
+
+    ``params=None`` builds a deterministic seed-0 policy — useless for
+    transfers but enough for registry round-trips and smoke tests.  The
+    ``sla`` supplies the Algorithm-1 starting point (its ``policy`` field
+    selects the initial cores/frequency, so a policy cloned from ME starts
+    where ME starts), the controller-tick interval, and the traced
+    ``delta_ch``/``max_ch`` action scaling.
+    """
+
+    params: Any = None
+    cfg: Optional[PolicyConfig] = None
+    sla: SLA = SLA()
+    label: Optional[str] = None
+
+    tunes = True
+
+    def __post_init__(self):
+        cfg = self.cfg
+        params = self.params
+        if params is None:
+            cfg = cfg or PolicyConfig()
+            params = init_policy(cfg, jax.random.PRNGKey(0))
+        params = canonical_params(params)
+        if cfg is None:
+            cfg = config_from_params(params)
+        object.__setattr__(self, "params", params)
+        object.__setattr__(self, "cfg", cfg)
+        object.__setattr__(self, "_digest", params_digest(params))
+
+    @property
+    def name(self) -> str:
+        return self.label or "learned"
+
+    @property
+    def timeout_s(self) -> float:
+        return self.sla.timeout_s
+
+    @property
+    def digest(self) -> str:
+        return self._digest
+
+    def __eq__(self, other) -> bool:
+        return (type(other) is LearnedController
+                and self.cfg == other.cfg
+                and self.sla == other.sla
+                and self._digest == other._digest)
+
+    def __hash__(self) -> int:
+        return hash((self.cfg, self.sla, self._digest))
+
+    def code(self) -> "LearnedController":
+        # tick() reads only cfg + params from self; the SLA numerics arrive
+        # via the traced SLAParams, and the init operating point is numeric
+        # (state0) — so the canonical instance keeps the weights (they ARE
+        # the code) and drops everything else.
+        if self.sla == SLA() and self.label is None:
+            return self
+        return LearnedController(params=self.params, cfg=self.cfg)
+
+    def init(self, specs, profile, cpu) -> ControllerInit:
+        params, chunked = heuristics.initialize(specs, profile, cpu,
+                                                self.sla)
+        num_ch0 = float(np.sum(np.asarray(params.cc)))
+        state = tuners.init_tuner_state(num_ch0, int(params.cores),
+                                        int(params.freq_idx))
+        return ControllerInit(params, state, chunked,
+                              SLAParams.from_sla(self.sla),
+                              np.zeros(len(chunked), np.float32))
+
+    def tick(self, state, meas, net, cpu, sla):
+        feats = featurize(meas.avg_tput, meas.avg_power, meas.cpu_load,
+                          meas.remaining_mb, state.num_ch, state.cores,
+                          state.freq_idx, net=net, sla=sla, cpu=cpu)
+        weights = {k: jnp.asarray(v) for k, v in self.params.items()}
+        logits = apply_policy(self.cfg, weights, feats)
+        cls = jnp.argmax(logits, axis=-1)
+        num_ch, cores, freq_idx = apply_action(
+            state.num_ch, state.cores, state.freq_idx, cls, sla=sla,
+            cpu=cpu)
+        # fsm doubles as a controller-tick counter (the FSM constants are
+        # meaningless to a learned policy); the stochastic training wrapper
+        # indexes its pre-drawn exploration noise with it.
+        return state._replace(num_ch=num_ch, prev_num_ch=state.num_ch,
+                              cores=cores, freq_idx=freq_idx,
+                              fsm=state.fsm + 1)
+
+    def channels(self, state, sim, static_w):
+        return heuristics.redistribute_channels(state.num_ch,
+                                                sim.remaining_mb)
+
+
+# ------------------------------------------------------------ checkpoints --
+
+def save_policy(ckpt_dir: str, params, *, step: int = 0) -> None:
+    """Persist policy params with ``repro.ckpt`` (atomic npz + meta)."""
+    from repro import ckpt
+    ckpt.save(ckpt_dir, step, canonical_params(params))
+
+
+def load_policy(ckpt_dir: str) -> dict:
+    """Load the newest policy checkpoint written by :func:`save_policy`.
+
+    Reads the npz + meta pair directly (no template pytree needed — the
+    flat param dict reconstructs from the checkpoint's own path list).
+    """
+    from repro import ckpt
+    steps = ckpt.available_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no policy checkpoint under {ckpt_dir!r}")
+    step_dir = os.path.join(ckpt_dir, f"step_{steps[-1]}")
+    with open(os.path.join(step_dir, "meta.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(step_dir, "arrays.npz")) as z:
+        arrays = [z[f"a{i}"] for i in range(len(meta["paths"]))]
+    return {path: np.asarray(a, np.float32)
+            for path, a in zip(meta["paths"], arrays)}

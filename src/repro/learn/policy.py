@@ -1,0 +1,143 @@
+"""Policy network for learned transfer controllers.
+
+A small MLP maps normalized per-tick observations to three categorical
+heads — channel, core, and frequency *deltas* — the exact ±1-step action
+space the paper's Algorithm-3 load control and the SLA tuners move in
+(channels move in units of the SLA's ``delta_ch``).  Matching the teacher
+action space is what makes behavior cloning a per-tick classification
+problem: the label of a controller tick is just the sign of the delta the
+teacher applied.
+
+The net is built directly on ``jax.numpy`` (the ``repro.models``
+transformer stack is a few orders of magnitude too big for an
+8-feature MLP) and trained with ``repro.optim.adamw``.  Everything here is
+pure and tracer-safe: ``featurize``/``apply_policy``/``apply_action`` run
+both inside the engine scan (scalar observations, params baked as XLA
+constants) and over whole ``[lanes, ticks]`` rollout batches during
+training — bit-identical arithmetic in both places.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CpuProfile
+
+# Head order is part of the trained-params contract (see Observation's
+# d_num_ch / d_cores / d_freq_idx capture in repro.core.engine).
+HEADS: Tuple[str, ...] = ("d_num_ch", "d_cores", "d_freq_idx")
+N_HEADS = 3
+N_CLASSES = 3            # {-1, 0, +1} per head
+N_FEATURES = 9
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Static architecture of the policy MLP (hashable, jit-static)."""
+
+    obs_dim: int = N_FEATURES
+    hidden: Tuple[int, ...] = (32, 32)
+    n_heads: int = N_HEADS
+    n_classes: int = N_CLASSES
+
+    @property
+    def out_dim(self) -> int:
+        return self.n_heads * self.n_classes
+
+
+def init_policy(cfg: PolicyConfig, key) -> dict:
+    """Deterministic (per key) MLP init: 1/sqrt(fan_in) normal weights,
+    zero biases.  Returns a flat ``{"w0": .., "b0": .., ...}`` pytree."""
+    sizes = (cfg.obs_dim,) + tuple(cfg.hidden) + (cfg.out_dim,)
+    params = {}
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+        params[f"w{i}"] = (jax.random.normal(sub, (fan_in, fan_out),
+                                             jnp.float32) * scale)
+        params[f"b{i}"] = jnp.zeros((fan_out,), jnp.float32)
+    return params
+
+
+def config_from_params(params) -> PolicyConfig:
+    """Recover the architecture from parameter shapes (checkpoints store
+    only the params; head/class counts are fixed by the action space)."""
+    n_layers = len(params) // 2
+    sizes = [int(jnp.shape(params[f"w{i}"])[0]) for i in range(n_layers)]
+    out = int(jnp.shape(params[f"w{n_layers - 1}"])[1])
+    if out != N_HEADS * N_CLASSES:
+        raise ValueError(f"policy output dim {out} != "
+                         f"{N_HEADS}x{N_CLASSES} action logits")
+    return PolicyConfig(obs_dim=sizes[0], hidden=tuple(sizes[1:]))
+
+
+def apply_policy(cfg: PolicyConfig, params, feats):
+    """MLP forward: [..., obs_dim] features -> [..., n_heads, n_classes]
+    logits."""
+    h = feats
+    n_layers = len(cfg.hidden) + 1
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jnp.tanh(h)
+    return h.reshape(h.shape[:-1] + (cfg.n_heads, cfg.n_classes))
+
+
+def featurize(avg_tput, avg_power, cpu_load, remaining_mb, num_ch, cores,
+              freq_idx, *, net, sla, cpu: CpuProfile):
+    """Normalize raw per-tick observations into the policy input vector.
+
+    Accepts scalars (inside the engine tick) or arrays of any matching
+    shape (training batches); ``net``/``sla`` are the traced
+    ``NetParams``/``SLAParams`` views, ``cpu`` the static profile.  All
+    quantities a ``LearnedController.tick`` can see at runtime — the
+    ``Observation`` capture's ``bw_scale`` (contention share) is recorded
+    for analysis but deliberately NOT a feature, since the controller
+    cannot observe it in deployment.
+    """
+    bw = jnp.maximum(jnp.asarray(net.bandwidth_mbps, jnp.float32), 1e-6)
+    n_freq = len(cpu.freq_levels_ghz)
+    feats = [
+        jnp.clip(avg_tput / bw, 0.0, 2.0),
+        avg_power / 40.0,
+        cpu_load,
+        jnp.log1p(jnp.maximum(remaining_mb, 0.0)) / 10.0,
+        num_ch / jnp.maximum(jnp.asarray(sla.max_ch, jnp.float32), 1.0),
+        jnp.asarray(cores, jnp.float32) / float(cpu.num_cores),
+        jnp.asarray(freq_idx, jnp.float32) / float(max(n_freq - 1, 1)),
+        jnp.clip(jnp.asarray(sla.target_tput_mbps, jnp.float32) / bw,
+                 0.0, 2.0),
+        jnp.log10(bw) / 4.0,
+    ]
+    feats = [jnp.asarray(f, jnp.float32) for f in feats]
+    return jnp.stack(jnp.broadcast_arrays(*feats), axis=-1)
+
+
+def apply_action(num_ch, cores, freq_idx, cls, *, sla, cpu: CpuProfile):
+    """Apply per-head action classes (0/1/2 -> -1/0/+1 steps) to an
+    operating point, clipped to the valid range.  Channel moves are scaled
+    by the SLA's ``delta_ch``, mirroring the heuristic tuners."""
+    d = jnp.asarray(cls, jnp.int32) - 1
+    delta_ch = jnp.asarray(sla.delta_ch, jnp.float32)
+    max_ch = jnp.asarray(sla.max_ch, jnp.float32)
+    num_ch2 = jnp.clip(num_ch + d[..., 0].astype(jnp.float32) * delta_ch,
+                       1.0, max_ch)
+    cores2 = jnp.clip(cores + d[..., 1], 1, cpu.num_cores)
+    freq2 = jnp.clip(freq_idx + d[..., 2], 0,
+                     len(cpu.freq_levels_ghz) - 1)
+    return num_ch2, cores2, freq2
+
+
+def action_classes(d_num_ch, d_cores, d_freq_idx):
+    """Teacher deltas -> per-head classes (sign + 1), the BC labels.
+    Large slow-start jumps collapse to their direction, which is the only
+    move the policy's action space can express."""
+    cls = jnp.stack([
+        jnp.sign(jnp.asarray(d_num_ch, jnp.float32)),
+        jnp.sign(jnp.asarray(d_cores, jnp.float32)),
+        jnp.sign(jnp.asarray(d_freq_idx, jnp.float32)),
+    ], axis=-1)
+    return (cls + 1.0).astype(jnp.int32)

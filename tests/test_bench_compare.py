@@ -1,0 +1,112 @@
+"""benchmarks.compare: the perf gate's edge cases.
+
+New gated metrics (``*_per_sec`` present only in the candidate record) must
+not crash or fail the gate — they are how new benchmarks join the
+trajectory — and ``--rebaseline`` must start gating them.  Malformed
+metric names and report payloads fail with a message, never a traceback.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import compare as bc  # noqa: E402
+
+from repro import api  # noqa: E402
+
+
+def _report_dict(completed):
+    return api.Report({"tool": [f"t{i}" for i in range(len(completed))],
+                       "completed": list(completed)},
+                      axes=("tool",), derive=False).to_dict()
+
+
+def test_new_gated_metric_does_not_fail_and_is_flagged(capsys):
+    base = {"fig2_wall_s": 1.0}
+    cur = {"fig2_wall_s": 1.0, "learn_smoke_eval_cells_per_sec": 3.0}
+    assert bc.compare(base, cur, 25.0) == []
+    out = capsys.readouterr().out
+    assert "learn_smoke_eval_cells_per_sec" in out
+    assert "new metric, no baseline" in out
+    assert "--rebaseline" in out
+
+
+def test_new_ungated_metric_prints_plain_new(capsys):
+    assert bc.compare({}, {"extra_wall_s": 2.0}, 25.0) == []
+    assert "[new]" in capsys.readouterr().out
+
+
+def test_gated_metric_missing_from_current_still_fails():
+    failures = bc.compare({"fleet_transfers_per_sec": 10.0}, {}, 25.0)
+    assert len(failures) == 1
+    assert "missing from current" in failures[0]
+
+
+def test_unknown_direction_is_a_failure_not_a_crash():
+    failures = bc.compare({"weird_metric": 1.0}, {"weird_metric": 1.0},
+                          25.0)
+    assert len(failures) == 1
+    assert "cannot infer direction" in failures[0]
+
+
+def test_regressions_in_both_directions():
+    base = {"a_per_sec": 100.0, "b_wall_s": 1.0}
+    ok = bc.compare(base, {"a_per_sec": 90.0, "b_wall_s": 1.1}, 25.0)
+    assert ok == []
+    bad = bc.compare(base, {"a_per_sec": 50.0, "b_wall_s": 2.0}, 25.0)
+    assert len(bad) == 2
+
+
+def test_compare_reports_completion_parity():
+    base = {"grid": _report_dict([1, 1, 1])}
+    assert bc.compare_reports(base, {"grid": _report_dict([1, 1, 1])}) == []
+    failures = bc.compare_reports(base, {"grid": _report_dict([1, 0, 1])})
+    assert len(failures) == 1
+    assert "completed cells dropped" in failures[0]
+
+
+def test_compare_reports_malformed_payload_is_a_failure_not_a_crash():
+    base = {"grid": {"not": "a report"}}
+    failures = bc.compare_reports(base, {"grid": {"not": "a report"}})
+    assert len(failures) == 1
+    assert "unreadable payload" in failures[0]
+
+
+def test_report_only_in_current_is_informational(capsys):
+    assert bc.compare_reports({}, {"learn_eval": _report_dict([1])}) == []
+    assert "report:learn_eval: [new]" in capsys.readouterr().out
+
+
+def test_rebaseline_picks_up_new_gated_metrics(tmp_path):
+    artifact = tmp_path / "BENCH_ci.json"
+    out = tmp_path / "baseline.json"
+    record = {
+        "metrics": {
+            "fleet_smoke_transfers_per_sec": 10.0,
+            "learn_smoke_eval_cells_per_sec": 3.0,
+            "fig2_smoke_wall_s": 1.0,
+        },
+        "reports": {"learn_eval": _report_dict([1, 1])},
+        "meta": {"python": "3", "machine": "x", "smoke": True},
+    }
+    artifact.write_text(json.dumps(record))
+    written = bc.rebaseline(str(artifact), str(out))
+    assert set(written["metrics"]) == {"fleet_smoke_transfers_per_sec",
+                                       "learn_smoke_eval_cells_per_sec"}
+    assert "learn_eval" in written["reports"]
+    on_disk = json.loads(out.read_text())
+    assert on_disk["metrics"] == written["metrics"]
+    # the freshly written baseline gates the artifact it came from cleanly
+    failures = bc.compare(on_disk["metrics"], record["metrics"], 25.0)
+    failures += bc.compare_reports(on_disk["reports"], record["reports"])
+    assert failures == []
+
+
+def test_rebaseline_without_gated_metrics_refuses(tmp_path):
+    artifact = tmp_path / "BENCH_ci.json"
+    artifact.write_text(json.dumps({"metrics": {"only_wall_s": 1.0}}))
+    with pytest.raises(SystemExit, match="per_sec"):
+        bc.rebaseline(str(artifact), str(tmp_path / "b.json"))

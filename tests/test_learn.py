@@ -1,0 +1,399 @@
+"""repro.learn: observation hook, rollout harness, trainers, and the
+learned controller flowing through the existing surfaces.
+
+The golden subset below duplicates entries of the PR 5 RUN_GOLDEN table
+(tests/test_environments.py): the observation hook must be a bit-exact
+no-op on the unobserved path, so ``api.run`` / ``api.sweep`` keep
+reproducing the pre-hook engine exactly.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api, fleet, learn
+from repro.api import scenario as _scenario
+from repro.core import engine
+from repro.core.types import (CHAMELEON, CLOUDLAB, CpuProfile, DatasetSpec,
+                              MIXED, SLA, SLAPolicy, SMALL_FILES)
+from repro.learn.controller import LearnedController
+
+CPU = CpuProfile()
+
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+ONE = (DatasetSpec("c", 50, 500.0, 10.0),)
+
+NO_CONTENTION = 1e9
+
+# Duplicated verbatim from tests/test_environments.py RUN_GOLDEN (PR 5):
+# (completed, time_s, energy_j, avg_tput_MBps, avg_power_w).
+GOLDEN_SUBSET = {
+    ("chameleon", "eemt", "fast"): (True, 1.2000000000000002, 31.04885482788086, 833.3333333333333, 25.87404568990071),
+    ("chameleon", "me", "fast"): (True, 4.0, 47.53553771972656, 249.9999542236328, 11.88388442993164),
+    ("chameleon", "wget/curl", "one"): (True, 8.3, 140.1924591064453, 60.24096385542168, 16.89065772366811),
+    ("cloudlab", "eett", "one"): (True, 4.2, 57.62987518310547, 119.04764084588913, 13.721398853120348),
+}
+_PROFILES = {"chameleon": CHAMELEON, "cloudlab": CLOUDLAB}
+_DATASETS = {"fast": FAST, "one": ONE}
+
+
+def _mk(name):
+    if name == "eett":
+        return api.make_controller(name, target_tput_mbps=400.0)
+    return api.make_controller(name)
+
+
+def _scn(profile, name, ds, **kw):
+    kw.setdefault("total_s", 240.0)
+    kw.setdefault("dt", 0.1)
+    return api.Scenario(profile=profile, datasets=ds,
+                        controller=name if not isinstance(name, str)
+                        else _mk(name), **kw)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _params(seed=0, cfg=learn.PolicyConfig()):
+    return learn.init_policy(cfg, jax.random.PRNGKey(seed))
+
+
+# ------------------------------------------------- observation hook ---------
+
+def test_runner_arity_with_and_without_observe():
+    """observe=False keeps the historical 3-tuple (no obs buffer is even
+    allocated); observe=True appends the Observation trace."""
+    prep = _scenario._prepare(_scn(CHAMELEON, "eemt", FAST))
+    k = prep.key
+    base = engine.get_runner(k.ctrl_code, k.env_code, k.cpu, k.n_steps,
+                             k.dt, k.ctrl_every, batched=False)
+    obs = engine.get_runner(k.ctrl_code, k.env_code, k.cpu, k.n_steps,
+                            k.dt, k.ctrl_every, batched=False, observe=True)
+    assert len(base(prep.inputs)) == 3
+    out = obs(prep.inputs)
+    assert len(out) == 4
+    assert isinstance(out[3], engine.Observation)
+
+
+def test_observed_runner_bit_identical_to_unobserved():
+    """The observation hook only *adds* outputs: sim/ts/metrics from the
+    observe=True runner match the observe=False runner bit-for-bit."""
+    for sc in (_scn(CHAMELEON, "eemt", FAST), _scn(CLOUDLAB, "me", ONE)):
+        prep = _scenario._prepare(sc)
+        k = prep.key
+        base = engine.get_runner(k.ctrl_code, k.env_code, k.cpu, k.n_steps,
+                                 k.dt, k.ctrl_every, batched=False)
+        obsr = engine.get_runner(k.ctrl_code, k.env_code, k.cpu, k.n_steps,
+                                 k.dt, k.ctrl_every, batched=False,
+                                 observe=True)
+        sim0, ts0, met0 = base(prep.inputs)
+        sim1, ts1, met1, _ = obsr(prep.inputs)
+        assert _leaves_equal((sim0, ts0, met0), (sim1, ts1, met1))
+
+
+def test_run_and_sweep_still_match_pr5_goldens():
+    """Golden no-op guard: with the hook in the engine, the public run()
+    and sweep() paths reproduce the PR 5 values exactly."""
+    cases = sorted(GOLDEN_SUBSET)
+    scs = [_scn(_PROFILES[pn], cn, _DATASETS[dn]) for pn, cn, dn in cases]
+    for (pn, cn, dn), sc in zip(cases, scs):
+        r = api.run(sc)
+        got = (r.completed, r.time_s, r.energy_j, r.avg_tput_MBps,
+               r.avg_power_w)
+        assert got == GOLDEN_SUBSET[(pn, cn, dn)], (pn, cn, dn)
+    for (pn, cn, dn), r in zip(cases, api.sweep(scs)):
+        got = (r.completed, r.time_s, r.energy_j, r.avg_tput_MBps,
+               r.avg_power_w)
+        assert got == GOLDEN_SUBSET[(pn, cn, dn)], (pn, cn, dn)
+
+
+def test_observation_semantics():
+    """Ticks are flagged, action deltas only fire on controller ticks, and
+    everything is masked to zero once the transfer completes."""
+    (run,) = learn.run_observed([_scn(CHAMELEON, "eemt", FAST)])
+    obs = run.obs
+    live = np.asarray(obs.live, bool)
+    ctrl = np.asarray(obs.is_ctrl, bool)
+    assert ctrl.sum() >= 1
+    assert not ctrl[~live].any()            # no ticks after completion
+    # action deltas are zero off controller ticks
+    for d in (obs.d_num_ch, obs.d_cores, obs.d_freq_idx):
+        assert not np.asarray(d)[~ctrl].any()
+    # window averages are positive while transferring
+    assert (np.asarray(obs.avg_tput)[ctrl] > 0).all()
+    assert (np.asarray(obs.avg_power)[ctrl] > 0).all()
+    # masked region is exactly zero across every field
+    for leaf in jax.tree.leaves(obs):
+        assert not np.asarray(leaf)[~live].any()
+    # operating point is within profile bounds on live ticks
+    assert (np.asarray(obs.cores)[live] >= 1).all()
+    assert (np.asarray(obs.num_ch)[live] >= 1).all()
+
+
+def test_teacher_dataset_shapes_and_ranges():
+    feats, labels = learn.teacher_dataset(
+        [_scn(CHAMELEON, "eemt", FAST), _scn(CHAMELEON, "me", ONE)])
+    assert feats.shape[1] == learn.N_FEATURES
+    assert labels.shape == (feats.shape[0], learn.N_HEADS)
+    assert feats.dtype == np.float32 and labels.dtype == np.int32
+    assert np.isfinite(feats).all()
+    assert ((labels >= 0) & (labels < learn.N_CLASSES)).all()
+
+
+def test_teacher_dataset_requires_ctrl_ticks():
+    # wget/curl never tunes -> no controller ticks -> explicit error
+    with pytest.raises(ValueError, match="controller tick"):
+        learn.teacher_dataset([_scn(CHAMELEON, "wget/curl", FAST)])
+
+
+def test_n_ctrl_ticks():
+    assert learn.n_ctrl_ticks(1200, 10) == 120
+    assert learn.n_ctrl_ticks(5, 10) == 1
+
+
+# ------------------------------------------------ policy & actions ----------
+
+def test_apply_action_respects_bounds():
+    import jax.numpy as jnp
+
+    from repro.core.types import SLAParams
+    sla = SLAParams.from_sla(SLA())
+    lo = learn.apply_action(jnp.asarray(1.0), jnp.asarray(1, jnp.int32),
+                            jnp.asarray(0, jnp.int32),
+                            jnp.zeros((3,), jnp.int32), sla=sla, cpu=CPU)
+    assert float(lo[0]) == 1.0 and int(lo[1]) == 1 and int(lo[2]) == 0
+    n_freq = len(CPU.freq_levels_ghz)
+    hi = learn.apply_action(jnp.asarray(float(sla.max_ch)),
+                            jnp.asarray(CPU.num_cores, jnp.int32),
+                            jnp.asarray(n_freq - 1, jnp.int32),
+                            2 * jnp.ones((3,), jnp.int32), sla=sla, cpu=CPU)
+    assert float(hi[0]) == float(sla.max_ch)
+    assert int(hi[1]) == CPU.num_cores
+    assert int(hi[2]) == n_freq - 1
+
+
+def test_action_classes_signs():
+    cls = learn.action_classes(np.asarray([-2.0, 0.0, 3.0]),
+                               np.asarray([1, 0, -1]),
+                               np.asarray([0, 5, -5]))
+    assert cls.tolist() == [[0, 2, 1], [1, 1, 2], [2, 0, 0]]
+
+
+def test_config_from_params_roundtrip():
+    cfg = learn.PolicyConfig(hidden=(16, 8))
+    params = _params(3, cfg)
+    assert learn.config_from_params(params) == cfg
+
+
+# --------------------------------------------- registry & content hash ------
+
+def test_registry_roundtrip():
+    assert "learned" in api.list_controllers()
+    c = api.make_controller("learned", params=_params())
+    assert isinstance(c, LearnedController)
+    assert c.name == "learned"
+    assert api.as_controller(c) is c
+    assert api.make_controller("learned", params=_params()) == c
+
+
+def test_params_hash_by_content_not_identity():
+    params = _params(1)
+    copied = {k: np.array(v, copy=True) for k, v in params.items()}
+    a, b = LearnedController(params=params), LearnedController(params=copied)
+    assert a == b and hash(a) == hash(b) and a.digest == b.digest
+    sa, sb = (_scn(CHAMELEON, c, FAST) for c in (a, b))
+    assert api.scenario_key(sa) == api.scenario_key(sb)
+    # equal code objects -> one compiled engine group for both
+    assert api.group_count([sa, sb]) == 1
+    # a one-element perturbation is a different policy everywhere
+    perturbed = {k: np.array(v, copy=True) for k, v in params.items()}
+    perturbed["b0"] = perturbed["b0"] + 1e-3
+    p = LearnedController(params=perturbed)
+    assert p != a and p.digest != a.digest
+    sp = _scn(CHAMELEON, p, FAST)
+    assert api.scenario_key(sp) != api.scenario_key(sa)
+    assert api.group_count([sa, sp]) == 2
+
+
+def test_learned_sla_and_label():
+    c = api.make_controller("learned", params=_params(),
+                            timeout_s=2.0, label="bc-v1")
+    assert c.name == "bc-v1"
+    assert c.timeout_s == 2.0
+    # code() strips presentation, keeps behavior-relevant state
+    assert c.code().sla == SLA()
+    assert c.code().digest == c.digest
+
+
+# ------------------------------------------- through run/sweep/fleet --------
+
+def test_learned_through_run_and_sweep():
+    c = LearnedController(params=_params())
+    scs = [_scn(CHAMELEON, c, FAST), _scn(CHAMELEON, c, ONE)]
+    solo = [api.run(sc) for sc in scs]
+    for r in solo:
+        assert np.isfinite(r.energy_j) and r.energy_j > 0
+    swept = api.sweep(scs)
+    for a, b in zip(solo, swept):
+        assert (a.time_s, a.energy_j, a.completed) == \
+            (b.time_s, b.energy_j, b.completed)
+
+
+def test_learned_through_fleet():
+    c = LearnedController(params=_params())
+    reqs = [fleet.TransferRequest(arrival_s=0.0, datasets=FAST,
+                                  controller=c, profile=CHAMELEON,
+                                  name="lrn", total_s=240.0),
+            fleet.TransferRequest(arrival_s=1.0, datasets=ONE,
+                                  controller=_mk("eemt"), profile=CHAMELEON,
+                                  name="heur", total_s=240.0)]
+    rep = fleet.run_fleet(reqs, fleet.host_pool(2, nic_mbps=NO_CONTENTION),
+                          wave_s=5.0, dt=0.1)
+    by = rep.by_controller()
+    assert "learned" in by
+    got = {t.name: t for t in rep.transfers}
+    assert got["lrn"].moved_mb > 0
+    # zero contention: the fleet lane matches the solo run bit-for-bit
+    solo = api.run(_scn(CHAMELEON, c, FAST))
+    assert got["lrn"].time_s == solo.time_s
+    assert got["lrn"].energy_j == solo.energy_j
+
+
+# -------------------------------------------------------- checkpointing -----
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = _params(5)
+    ckpt_dir = str(tmp_path / "policy")
+    learn.save_policy(ckpt_dir, params, step=3)
+    loaded = learn.load_policy(ckpt_dir)
+    assert sorted(loaded) == sorted(params)
+    for k in params:
+        assert np.array_equal(loaded[k], np.asarray(params[k]))
+    # the registry accepts a checkpoint path directly
+    c = api.make_controller("learned", params=ckpt_dir)
+    assert c == LearnedController(params=params)
+
+
+def test_load_policy_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        learn.load_policy(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------- trainers --------
+
+def _tiny_dataset():
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(128, learn.N_FEATURES)).astype(np.float32)
+    labels = rng.integers(0, learn.N_CLASSES,
+                          size=(128, learn.N_HEADS)).astype(np.int32)
+    return feats, labels
+
+
+def test_bc_train_is_bit_deterministic_per_seed():
+    feats, labels = _tiny_dataset()
+    p1, h1 = learn.bc_train(feats, labels, key=learn.seed_everything(7),
+                            steps=20)
+    p2, h2 = learn.bc_train(feats, labels, key=learn.seed_everything(7),
+                            steps=20)
+    assert _leaves_equal(p1, p2)
+    assert np.array_equal(h1["loss"], h2["loss"])
+    p3, _ = learn.bc_train(feats, labels, key=learn.seed_everything(8),
+                           steps=20)
+    assert not _leaves_equal(p1, p3)
+
+
+def test_learn_smoke_bc_fits_teacher_ticks():
+    """The CI learn-smoke contract: 8 lanes x 64 ticks of EEMT teacher
+    rollouts -> a BC fit whose loss decreases."""
+    scs = [api.Scenario(profile=CHAMELEON,
+                        datasets=(DatasetSpec("d", 500,
+                                              4000.0 + 700.0 * i, 8.0),),
+                        controller=_mk("eemt"), total_s=6.4, dt=0.1)
+           for i in range(8)]
+    feats, labels = learn.teacher_dataset(scs)
+    assert feats.shape[0] >= 8           # at least one tick per lane
+    params, hist = learn.bc_train(feats, labels,
+                                  key=learn.seed_everything(0), steps=60)
+    loss = hist["loss"]
+    assert loss.shape == (60,)
+    assert loss[-5:].mean() < loss[:5].mean()
+    # ... and the fitted params deploy through the registry
+    c = api.make_controller("learned", params=params)
+    assert api.run(_scn(CHAMELEON, c, ONE)).energy_j > 0
+
+
+def test_bc_policy_within_10pct_of_teacher_energy():
+    """Acceptance: behavior cloning EEMT on the fig2 smoke grid lands
+    within 10% of the teacher's energy on every cell (and completes)."""
+    teacher = api.make_controller("EEMT", max_ch=64)
+    cells = [api.Scenario(profile=CHAMELEON, datasets=ds,
+                          controller=teacher, total_s=900.0, dt=0.1)
+             for ds in ((SMALL_FILES,), MIXED)]
+    feats, labels = learn.teacher_dataset(cells)
+    params, _ = learn.bc_train(feats, labels, key=learn.seed_everything(0),
+                               steps=400)
+    learned = LearnedController(params=params, sla=teacher.sla)
+    report = learn.evaluate(learned, rivals={"EEMT": teacher}, smoke=True)
+    ratios = learn.vs_teacher(report, "EEMT")
+    assert set(ratios) == {"chameleon/small", "chameleon/mixed"}
+    for cell, r in ratios.items():
+        assert r["learned_completed"] and r["teacher_completed"], cell
+        assert r["energy_ratio"] <= 1.10, (cell, r)
+
+
+def test_pg_train_is_bit_deterministic():
+    scs = [api.Scenario(profile=CHAMELEON,
+                        datasets=(DatasetSpec("d", 200,
+                                              2000.0 + 500.0 * i, 8.0),),
+                        controller=_mk("eemt"), total_s=12.0, dt=0.1)
+           for i in range(2)]
+    pg = learn.PGConfig(steps=2, lr=1e-3)
+    p1, h1 = learn.pg_train(scs, key=learn.seed_everything(3), pg=pg)
+    p2, h2 = learn.pg_train(scs, key=learn.seed_everything(3), pg=pg)
+    assert _leaves_equal(p1, p2)
+    assert np.array_equal(h1["cost"], h2["cost"])
+
+
+def test_pg_train_improves_energy_delay():
+    """REINFORCE on long transfers: the normalized energy-delay cost drops
+    below the first update's within a handful of steps."""
+    scs = [api.Scenario(profile=CHAMELEON,
+                        datasets=(DatasetSpec("d", 1000,
+                                              8000.0 + 1500.0 * i, 8.0),),
+                        controller=_mk("eemt"), total_s=120.0, dt=0.1)
+           for i in range(8)]
+    pg = learn.PGConfig(steps=6, lr=2e-3, tput_floor_mbps=400.0)
+    params, hist = learn.pg_train(
+        scs, key=learn.seed_everything(0),
+        sla=SLA(policy=SLAPolicy.MIN_ENERGY), pg=pg)
+    assert hist["cost"].shape == (6,)
+    assert hist["ed_ref"] > 0
+    assert hist["cost"].min() < hist["cost"][0]
+    assert all(np.isfinite(v).all() for v in jax.tree.leaves(params))
+
+
+def test_pg_rejects_mixed_lane_groups():
+    scs = [_scn(CHAMELEON, "eemt", FAST, total_s=12.0),
+           _scn(CHAMELEON, "eemt", FAST, total_s=24.0)]
+    with pytest.raises(ValueError, match="code group"):
+        learn.pg_train(scs, key=learn.seed_everything(0),
+                       pg=learn.PGConfig(steps=1))
+
+
+# -------------------------------------------------------- evaluation --------
+
+def test_evaluation_experiment_shape():
+    from repro.api import experiments as _exp
+    exp = learn.evaluation_experiment(
+        LearnedController(params=_params()), smoke=True)
+    assert exp.name == "learn_eval"
+    names = [a.name for a in _exp._iter_axes(exp.space)]
+    assert names == ["testbed", "dataset", "tool"]
+    tools = next(a for a in _exp._iter_axes(exp.space) if a.name == "tool")
+    assert "learned" in list(tools.labels)

@@ -49,6 +49,44 @@ def bench_engine(rows=None):
     emit("micro/engine_transfer", dt, f"{n_steps / dt:.0f}steps_per_s")
 
 
+def bench_engine_executors(bench=None, n_steps=6000):
+    """Engine ticks/second per executor (jit warm, best-of-3).
+
+    One unbatched transfer inflated so it never completes inside the
+    horizon: every executor then executes exactly ``n_steps`` ticks
+    (the pallas kernel early-exits internally, so an incomplete transfer
+    is what makes the tick counts comparable).  Records
+    ``engine_<executor>_ticks_per_sec`` into ``bench`` — the ``_per_sec``
+    suffix is what the CI perf gate tracks (benchmarks/compare.py).
+    Pallas runs in interpret mode on CPU: its number is a correctness-path
+    timing, not kernel performance.
+    """
+    import numpy as np
+
+    from repro.core import engine
+
+    ctrl = api.make_controller("eemt", max_ch=64)
+    ci = ctrl.init(MIXED, CHAMELEON, CPU)
+    inp = jax.tree.map(np.asarray,
+                       engine.ScanInputs.from_init(ci, CHAMELEON, n_steps))
+    inp = inp._replace(total_mb=inp.total_mb * 1e6)   # never completes
+    env = api.as_environment(None).code()
+    for ex in ("reference", "blocked", "pallas"):
+        runner = engine.get_runner(ctrl.code(), env, CPU, n_steps, 0.1, 10,
+                                   batched=False, early_exit=False,
+                                   executor=ex)
+        jax.block_until_ready(runner(inp))                    # warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(runner(inp))
+            best = min(best, time.perf_counter() - t0)
+        tps = n_steps / best
+        emit(f"micro/engine_ticks_{ex}", best, f"{tps:.0f}ticks_per_s")
+        if bench is not None:
+            bench[f"engine_{ex}_ticks_per_sec"] = tps
+
+
 def bench_vmap_sweep(rows=None):
     """Parameter sweep via vmap: K simultaneous simulations in one XLA call
     (the JAX-native replacement for the paper's sequential experiments)."""
@@ -141,8 +179,15 @@ def bench_train_smoke(rows=None):
     emit("micro/train_step_smoke", dt, f"loss={float(m['loss']):.3f}")
 
 
-def run(rows=None):
+def run(rows=None, bench=None, smoke=False):
+    """``smoke=True`` (CI bench-smoke) runs only the gated per-executor
+    engine record on a shorter horizon; the full micro suite is the
+    default."""
+    if smoke:
+        bench_engine_executors(bench, n_steps=2000)
+        return
     bench_engine(rows)
+    bench_engine_executors(bench)
     bench_vmap_sweep(rows)
     bench_kernels(rows)
     bench_train_smoke(rows)

@@ -82,7 +82,7 @@ def main() -> None:
 
     if "micro" in only:
         from . import micro
-        micro.run()
+        micro.run(bench=bench, smoke=args.smoke)
 
     if "roofline" in only:
         from . import roofline

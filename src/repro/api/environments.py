@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Optional, Protocol, runtime_checkable
+from typing import Any, Callable, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 
@@ -86,7 +86,24 @@ class EnergyModel(Protocol):
 
 @runtime_checkable
 class NetworkModel(Protocol):
-    """Per-tick WAN physics: (state, params) -> (state', observables)."""
+    """Per-tick WAN physics: (state, params) -> (state', observables).
+
+    **Array-form lowering (optional).**  The engine's flat executors
+    (``blocked``, ``pallas`` — see ``repro.core.engine``) advance the
+    simulation over the packed structure-of-arrays rows of
+    ``repro.core.tickstate.TickLayout`` instead of the ``SimState`` pytree.
+    A model may provide a native lowering::
+
+        step_arrays(lay, energy, net, cpu, sim_row, params, avg_file_mb,
+                    dt, bw_scale) -> (sim_row', NetOut)
+
+    where ``sim_row`` is the f32 row of ``lay.pack_sim``.  When absent (the
+    protocol-level default — deliberately *not* part of the runtime-checked
+    protocol body, so existing models stay conformant), the engine derives
+    one from the pytree ``step`` through the bit-exact pack/unpack adapters
+    (:func:`lower_step_arrays`), so the lowering never changes numerics —
+    a native implementation is purely a fusion/performance hook.
+    """
 
     name: str
 
@@ -306,6 +323,20 @@ class Environment:
 
 
 REFERENCE_ENV = Environment()
+
+
+def lower_step_arrays(network: NetworkModel, n_partitions: int):
+    """Array-form lowering of ``network.step`` for ``n_partitions`` lanes.
+
+    Returns the ``step_arrays``-shaped callable the flat engine executors
+    consume: the model's native ``step_arrays`` when it defines one, else
+    the protocol-level default derived from the pytree ``step`` via the
+    bit-exact ``repro.core.tickstate`` pack/unpack adapters.
+    """
+    from repro.core import tickstate
+
+    return tickstate.lower_network_step(network,
+                                        tickstate.TickLayout(n_partitions))
 
 
 # -------------------------------------------------------------- registries --

@@ -49,6 +49,12 @@ class Scenario:
     exit), so ``energy_j`` / ``time_s`` / ``avg_power_w`` of a completed
     transfer are invariant to how generous the horizon was.
 
+    ``executor`` selects the engine lowering (``repro.core.engine``):
+    ``"auto"`` (the default) resolves per backend, and every executor is
+    bit-identical — it is a performance knob, not a semantics knob.  It
+    joins the sweep group key, so mixing executors in one sweep simply
+    splits groups.
+
     ``eq=False``: scenarios may carry an ndarray ``bw_schedule``, so equality
     and hashing are by identity (array fields would make ``==`` ambiguous).
     """
@@ -62,6 +68,7 @@ class Scenario:
     dt: float = 0.1
     bw_schedule: Optional[Any] = None   # [n_steps] fraction of bandwidth
     name: Optional[str] = None
+    executor: str = "auto"              # engine lowering (see repro.core)
 
     def __post_init__(self):
         object.__setattr__(self, "datasets", tuple(self.datasets))
@@ -74,6 +81,9 @@ class Scenario:
         if self.total_s < self.dt:
             raise ValueError(f"total_s ({self.total_s}) must cover at least "
                              f"one tick of dt ({self.dt})")
+        # Validate the executor name eagerly (resolution happens at run
+        # time, so "auto" stays backend-relative).
+        engine.resolve_executor(self.executor)
 
 
 class _GroupKey(NamedTuple):
@@ -86,6 +96,7 @@ class _GroupKey(NamedTuple):
     dt: float
     ctrl_every: int
     n_partitions: int
+    executor: str
 
 
 def ctrl_stride(ctrl: Controller, dt: float) -> int:
@@ -102,8 +113,11 @@ def _group_key(ctrl: Controller, env: Environment, sc: Scenario,
     """Single source of truth for both ``_prepare`` (actual grouping) and
     ``group_count`` (prediction)."""
     n_steps = int(round(sc.total_s / sc.dt))
+    # Resolve "auto" here so an auto scenario groups (and shares a compiled
+    # executable) with one that named the same executor explicitly.
     return _GroupKey(ctrl.code(), env.code(), sc.cpu, n_steps, sc.dt,
-                     ctrl_stride(ctrl, sc.dt), n_partitions)
+                     ctrl_stride(ctrl, sc.dt), n_partitions,
+                     engine.resolve_executor(sc.executor))
 
 
 class _Prepared(NamedTuple):
@@ -216,7 +230,8 @@ def _run_prepared(prep: _Prepared) -> TransferResult:
     """Execute one prepared scenario on the unbatched cached runner."""
     k = prep.key
     runner = engine.get_runner(k.ctrl_code, k.env_code, k.cpu, k.n_steps,
-                               k.dt, k.ctrl_every, batched=False)
+                               k.dt, k.ctrl_every, batched=False,
+                               executor=k.executor)
     sim, _, metrics = runner(prep.inputs)
     return _postprocess(sim, metrics, prep)
 
@@ -241,12 +256,12 @@ def _run_group(key: _GroupKey, stacked, batch: int, devices):
         mesh = shd.batch_mesh(devices)
         runner = engine.get_sharded_runner(
             key.ctrl_code, key.env_code, key.cpu, key.n_steps, key.dt,
-            key.ctrl_every, tuple(devices))
+            key.ctrl_every, tuple(devices), executor=key.executor)
         sim, _, metrics = runner(shd.shard_batch(stacked, mesh))
     else:
         runner = engine.get_runner(key.ctrl_code, key.env_code, key.cpu,
                                    key.n_steps, key.dt, key.ctrl_every,
-                                   batched=True)
+                                   batched=True, executor=key.executor)
         sim, _, metrics = runner(stacked)
     sim = jax.tree.map(lambda x: np.asarray(x)[:batch], sim)
     metrics = jax.tree.map(lambda x: np.asarray(x)[:batch], metrics)

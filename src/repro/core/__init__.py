@@ -12,13 +12,20 @@ Public API:
     baselines     — wget/curl, http/2, Alan/Ismail static tuners
 
 The user-facing surface is ``repro.api`` (Controller protocol + registry,
-Scenario, run/sweep).  ``simulate`` below is a deprecated shim kept for
-backwards compatibility.
+Scenario, run/sweep).
 """
 from . import (baselines, energy_model, engine, fsm, heuristics,  # noqa: F401
                load_control, network_model, tuners, types)
-from .engine import TransferResult, simulate  # noqa: F401
+from .engine import TransferResult  # noqa: F401
 from .types import (CHAMELEON, CLOUDLAB, DIDCLAB, LARGE_FILES,  # noqa: F401
                     MEDIUM_FILES, MIXED, SMALL_FILES, TESTBEDS, CpuProfile,
                     DatasetSpec, NetworkProfile, SLA, SLAPolicy,
                     TransferParams, TunerState)
+
+
+def __getattr__(name):
+    if name == "simulate":
+        raise AttributeError(
+            "repro.core.simulate was removed: build a repro.api.Scenario "
+            "and call repro.api.run (or repro.api.sweep)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

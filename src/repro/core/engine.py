@@ -1,4 +1,4 @@
-"""Transfer engine: a chunked, early-exiting ``lax.scan`` per transfer.
+"""Transfer engine: a lowered tick core with pluggable executors.
 
 The engine is a *substrate*: it composes any ``repro.api`` Environment
 (a NetworkModel + EnergyModel pair — the physics) with any object
@@ -34,28 +34,62 @@ is only *simulated* until it drains:
   completion time is therefore ``(argmax(done) + 1) * dt``, and ``SimState.t``
   freezes at exactly that value.
 
+The lowering contract (flat state + executors)
+----------------------------------------------
+Engine semantics are *defined* on nested pytree carries — ``(SimState,
+TunerState)`` — by :func:`make_step_fn`, because that is the shape the
+Controller/Environment protocols speak.  Execution, however, is pluggable.
+An **executor** decides how those semantics are driven:
+
+* ``reference`` — the chunked early-exit ``lax.scan`` over the pytree
+  carry, exactly as above.  This is the golden-tested baseline every other
+  executor must reproduce bit-for-bit.
+* ``blocked`` — a hand-blocked scan whose loop-boundary carries are the
+  flat structure-of-arrays ``TickState`` rows of
+  :class:`repro.core.tickstate.TickLayout` (one f32 row of ``2P + 9``
+  slots, one i32 row of 3).  The per-tick network advance routes through
+  the array-form ``step_arrays`` lowering (native when the model provides
+  one, otherwise derived from the pytree ``step`` via the bit-exact
+  pack/unpack adapters).  The fleet wave runner additionally takes whole
+  lane batches as stacked rows — donated on the sharded path — so a wave
+  is a handful of ``np.stack`` calls instead of per-lane pytree traffic.
+* ``pallas`` — a fused network-step + energy-model + controller-FSM tick
+  kernel (one ``pallas_call`` per transfer, per-tick metrics stored from
+  inside the kernel), built on ``repro.kernels.pallas_compat``.  Runs
+  compiled on TPU; everywhere else it runs in interpret mode so tier-1
+  stays green on CPU.  ``observe=True`` is not supported here — use
+  ``blocked``.
+
+``executor="auto"`` resolves per backend (:func:`resolve_executor`):
+``pallas`` on TPU, ``blocked`` otherwise, and always ``blocked`` when the
+observation hook is on.  Because the pack/unpack adapters are pure
+concatenation/slicing, every executor is bit-identical on the golden
+run/sweep/fleet cells (tests/test_executors.py); the choice is purely a
+performance/deployment knob.
+
 Everything numeric (testbed profile, SLA hyper-parameters, dataset sizes,
 initial operating point, bandwidth schedule) arrives as traced ``ScanInputs``
 leaves, so a whole grid of scenarios that share one controller + environment
 code path runs as a single ``jax.vmap``-over-scan XLA launch — see
 ``repro.api.sweep``, which additionally shards large groups across devices.
 Runners are built once per (controller code, environment code, cpu, n_steps,
-dt, ctrl_every) group and cached.
+dt, ctrl_every, executor) group and kept in explicit caches —
+:func:`clear_runner_caches` drops them (test fixtures call it so repeated
+sweeps in one process don't accumulate compiled executables without bound).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import warnings
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import tickstate
 from . import tuners
-from .types import (CpuProfile, NetParams, NetworkProfile, SLA, SLAParams,
-                    TickMetrics, TransferParams, TunerState)
+from .types import (CpuProfile, NetParams, SLAParams, TickMetrics,
+                    TransferParams, TunerState)
 
 # Chunking of the early-exit loop.  Purely a performance knob (completion
 # masking keeps any chunking bit-identical): larger chunks amortize the
@@ -66,6 +100,35 @@ from .types import (CpuProfile, NetParams, NetworkProfile, SLA, SLAParams,
 # (overshoot <= n_steps / MAX_CHUNKS ticks, ~1.6% of the horizon).
 MIN_CHUNK = 512
 MAX_CHUNKS = 64
+
+#: Executor names accepted everywhere an ``executor=`` knob exists
+#: ("auto" additionally resolves per backend).
+EXECUTORS = ("reference", "blocked", "pallas")
+
+
+def resolve_executor(executor: str = "auto", *, observe: bool = False,
+                     backend: Optional[str] = None) -> str:
+    """Resolve an executor request to a concrete executor name.
+
+    ``auto`` picks ``pallas`` on TPU and ``blocked`` everywhere else
+    (interpret-mode pallas is a correctness path, not a fast path), and
+    always ``blocked`` when the observation hook is on (the fused kernel
+    does not emit Observation traces).  Explicit names pass through after
+    validation; ``pallas`` with ``observe=True`` is rejected here, at the
+    resolution boundary, instead of deep inside a trace.
+    """
+    if executor == "auto":
+        if observe:
+            return "blocked"
+        backend = backend or jax.default_backend()
+        return "pallas" if backend == "tpu" else "blocked"
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r}; expected one of "
+                         f"{('auto',) + EXECUTORS}")
+    if executor == "pallas" and observe:
+        raise ValueError("the pallas executor does not support observe=True;"
+                         " use executor='blocked' (or 'auto')")
+    return executor
 
 
 @dataclasses.dataclass
@@ -87,11 +150,9 @@ class TransferResult:
 
     @property
     def avg_tput_mbps(self) -> float:
-        """Deprecated misnomer: the value has always been MB/s, not Mbit/s."""
-        warnings.warn("TransferResult.avg_tput_mbps holds MB/s; use "
-                      "avg_tput_MBps (or avg_tput_gbps for bits)",
-                      DeprecationWarning, stacklevel=2)
-        return self.avg_tput_MBps
+        raise AttributeError(
+            "TransferResult.avg_tput_mbps was removed (the value always held "
+            "MB/s, not Mbit/s): use avg_tput_MBps, or avg_tput_gbps for bits")
 
     def row(self) -> str:
         return (f"{self.name},{self.time_s:.1f},{self.energy_j:.0f},"
@@ -179,6 +240,19 @@ def _controller_tick(controller, ts: TunerState, sim, load, net, cpu,
     new = controller.tick(ts, meas, net, cpu, sla)
     z = jnp.zeros((), jnp.float32)
     return new._replace(acc_mb=z, acc_j=z, acc_s=z)
+
+
+class _LoweredEnv:
+    """Environment view for the flat executors: the network advance routes
+    through the array-form ``step_arrays`` lowering (see
+    :class:`repro.core.tickstate.ArrayLoweredNetwork`); the energy model is
+    already array-form (scalar operating points) and passes through."""
+
+    __slots__ = ("network", "energy")
+
+    def __init__(self, env, lay: tickstate.TickLayout):
+        self.network = tickstate.ArrayLoweredNetwork(env.network, lay)
+        self.energy = env.energy
 
 
 def make_step_fn(controller, env, cpu: CpuProfile, inp: ScanInputs, *,
@@ -302,9 +376,18 @@ def _init_obs_buffer(padded: int) -> Observation:
     )
 
 
+def _chunking(n_steps: int, chunk: Optional[int]):
+    if chunk is None:
+        chunk = max(MIN_CHUNK, -(-n_steps // MAX_CHUNKS))
+    chunk = max(min(n_steps, int(chunk)), 1)
+    n_chunks = -(-n_steps // chunk)
+    return chunk, n_chunks, n_chunks * chunk
+
+
 def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
                ctrl_every: int, early_exit: bool = True,
-               chunk: Optional[int] = None, observe: bool = False):
+               chunk: Optional[int] = None, observe: bool = False,
+               executor: str = "reference"):
     """One full transfer: ScanInputs -> (final SimState, TunerState, traces).
 
     Pure and shape-stable in its pytree argument, hence vmap-able across a
@@ -314,54 +397,103 @@ def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
     [n_steps] buffer via ``dynamic_update_slice`` so the output shape is
     identical to the reference full-horizon scan (``early_exit=False``).
 
+    ``executor`` selects the lowering (see the module docstring):
+    ``reference`` scans the pytree carry, ``blocked`` carries the flat
+    ``TickState`` rows across loop boundaries and lowers the network step
+    to array form, ``pallas`` fuses the whole tick loop into one kernel
+    (``early_exit``/``chunk`` do not apply there — the kernel early-exits
+    its internal while loop on completion).
+
     With ``observe=True`` the core returns ``(sim, ts, metrics, obs)`` where
     ``obs`` is an [n_steps]-shaped :class:`Observation` trace; without it,
     the classic ``(sim, ts, metrics)`` triple (and an unchanged program).
     """
-    if chunk is None:
-        chunk = max(MIN_CHUNK, -(-n_steps // MAX_CHUNKS))
-    chunk = max(min(n_steps, int(chunk)), 1)
-    n_chunks = -(-n_steps // chunk)
-    padded = n_chunks * chunk
+    executor = resolve_executor(executor, observe=observe)
+    if executor == "pallas":
+        return _build_pallas_core(controller, env, cpu, n_steps=n_steps,
+                                  dt=dt, ctrl_every=ctrl_every)
+    chunk, n_chunks, padded = _chunking(n_steps, chunk)
+    blocked = executor == "blocked"
 
     def core(inp: ScanInputs):
+        n_partitions = int(np.shape(inp.pp)[-1])
+        lay = tickstate.TickLayout(n_partitions)
+        step_env = _LoweredEnv(env, lay) if blocked else env
         sim0 = env.network.init_state(inp.total_mb, inp.net)
-        step = make_step_fn(controller, env, cpu, inp, dt=dt,
+        step = make_step_fn(controller, step_env, cpu, inp, dt=dt,
                             ctrl_every=ctrl_every,
                             n_steps=n_steps if padded != n_steps else None,
                             observe=observe)
 
         if not early_exit:
             xs = (jnp.arange(n_steps, dtype=jnp.int32), inp.bw)
-            (sim, ts), ys = jax.lax.scan(step, (sim0, inp.state0), xs)
+            if blocked:
+                carry0 = lay.pack_state(sim0, inp.state0)
+
+                def fstep(carry, x):
+                    st, ys = step(lay.unpack_state(*carry), x)
+                    return lay.pack_state(*st), ys
+
+                (f32, i32), ys = jax.lax.scan(fstep, carry0, xs)
+                sim, ts = lay.unpack_state(f32, i32)
+            else:
+                (sim, ts), ys = jax.lax.scan(step, (sim0, inp.state0), xs)
             if observe:
                 return sim, ts, ys[0], ys[1]
             return sim, ts, ys
 
         bw = jnp.pad(inp.bw, ((0, padded - n_steps),))
 
-        def cond(carry):
-            k, (sim, _), _ = carry
-            return jnp.logical_and(k < n_chunks,
-                                   jnp.sum(sim.remaining_mb) > 0.0)
-
-        def body(carry):
-            k, state, buf = carry
-            start = k * chunk
-            idx = start + jnp.arange(chunk, dtype=jnp.int32)
-            bw_chunk = jax.lax.dynamic_slice(bw, (start,), (chunk,))
-            state, m = jax.lax.scan(step, state, (idx, bw_chunk))
-            buf = jax.tree.map(
+        def store(buf, m, start):
+            return jax.tree.map(
                 lambda b, x: jax.lax.dynamic_update_slice(
                     b, x, (start,) + (0,) * (b.ndim - 1)),
                 buf, m)
-            return k + 1, state, buf
 
         buf0 = _init_metrics_buffer(padded)
         if observe:
             buf0 = (buf0, _init_obs_buffer(padded))
-        carry0 = (jnp.zeros((), jnp.int32), (sim0, inp.state0), buf0)
-        _, (sim, ts), buf = jax.lax.while_loop(cond, body, carry0)
+
+        if blocked:
+            # Flat TickState rows cross the while-loop boundary; the pytree
+            # carry lives only inside each chunk's scan.
+            def cond(carry):
+                k, f32, _, _ = carry
+                return jnp.logical_and(
+                    k < n_chunks,
+                    jnp.sum(f32[..., :n_partitions]) > 0.0)
+
+            def body(carry):
+                k, f32, i32, buf = carry
+                start = k * chunk
+                idx = start + jnp.arange(chunk, dtype=jnp.int32)
+                bw_chunk = jax.lax.dynamic_slice(bw, (start,), (chunk,))
+                st, m = jax.lax.scan(step, lay.unpack_state(f32, i32),
+                                     (idx, bw_chunk))
+                f32, i32 = lay.pack_state(*st)
+                return k + 1, f32, i32, store(buf, m, start)
+
+            f0, i0 = lay.pack_state(sim0, inp.state0)
+            carry0 = (jnp.zeros((), jnp.int32), f0, i0, buf0)
+            _, f32, i32, buf = jax.lax.while_loop(cond, body, carry0)
+            sim, ts = lay.unpack_state(f32, i32)
+        else:
+            def cond(carry):
+                k, (sim, _), _ = carry
+                return jnp.logical_and(k < n_chunks,
+                                       jnp.sum(sim.remaining_mb) > 0.0)
+
+            def body(carry):
+                k, state, buf = carry
+                start = k * chunk
+                idx = start + jnp.arange(chunk, dtype=jnp.int32)
+                bw_chunk = jax.lax.dynamic_slice(bw, (start,), (chunk,))
+                state, m = jax.lax.scan(step, state, (idx, bw_chunk))
+                return k + 1, state, store(buf, m, start)
+
+            carry0 = (jnp.zeros((), jnp.int32), (sim0, inp.state0), buf0)
+            _, (sim, ts), buf = jax.lax.while_loop(cond, body, carry0)
+
         out = jax.tree.map(lambda b: b[:n_steps], buf)
         if observe:
             return sim, ts, out[0], out[1]
@@ -370,11 +502,165 @@ def build_core(controller, env, cpu: CpuProfile, *, n_steps: int, dt: float,
     return core
 
 
-@functools.lru_cache(maxsize=None)
+def _build_pallas_core(controller, env, cpu: CpuProfile, *, n_steps: int,
+                       dt: float, ctrl_every: int):
+    """Fused tick-loop kernel: one ``pallas_call`` runs the whole transfer.
+
+    Inputs cross the kernel boundary in the flat ``TickState`` form (one
+    parameter row, the bandwidth schedule, the packed initial state); the
+    kernel reconstructs the traced ``ScanInputs``, drives the *same*
+    :func:`make_step_fn` tick — with the network advance lowered to
+    ``step_arrays`` form — inside an early-exiting while loop, and stores
+    per-tick metrics straight into the output buffers (pre-filled with the
+    never-executed-tick values, so the trace is bit-identical to the
+    reference scan).  Compiled on TPU via ``kernels/pallas_compat``;
+    interpret mode elsewhere.
+    """
+    from jax.experimental import pallas as pl
+
+    interpret = jax.default_backend() != "tpu"
+
+    def core(inp: ScanInputs):
+        n_partitions = int(np.shape(inp.pp)[-1])
+        lay = tickstate.TickLayout(n_partitions)
+        lowered = _LoweredEnv(env, lay)
+        sim0 = env.network.init_state(inp.total_mb, inp.net)
+        f0, i0 = lay.pack_state(sim0, inp.state0)
+        prow = lay.pack_params(inp)
+        bw = jnp.asarray(inp.bw, jnp.float32)
+
+        # Pallas kernels may not capture non-scalar constants (the CPU
+        # frequency/power tables the physics materializes at trace time), so
+        # the tick is staged to a jaxpr once against abstract example
+        # arguments and its hoisted constants ride into the kernel as extra
+        # inputs.
+        def tick(kin, carry, xs):
+            step = make_step_fn(controller, lowered, cpu, kin, dt=dt,
+                                ctrl_every=ctrl_every)
+            return step(carry, xs)
+
+        carry_ex = lay.unpack_state(
+            jnp.zeros((lay.f32_size,), jnp.float32),
+            jnp.zeros((lay.i32_size,), jnp.int32))
+        kin_ex = ScanInputs(
+            state0=carry_ex[1], bw=jnp.ones((), jnp.float32),
+            **lay.unpack_params(jnp.zeros((lay.params_size,), jnp.float32)))
+        xs_ex = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+        closed = jax.make_jaxpr(tick)(kin_ex, carry_ex, xs_ex)
+        consts = [jnp.asarray(c) for c in closed.consts]
+        out_tree = jax.tree.structure(
+            jax.eval_shape(tick, kin_ex, carry_ex, xs_ex))
+
+        def tick_fn(kin, carry, xs, *cvals):
+            flat = jax.tree.leaves((kin, carry, xs))
+            out = jax.core.eval_jaxpr(closed.jaxpr, list(cvals), *flat)
+            return jax.tree.unflatten(out_tree, out)
+
+        def kernel(prow_ref, bw_ref, f0_ref, i0_ref, *refs):
+            const_refs = refs[:len(consts)]
+            (fout_ref, iout_ref, tput_ref, power_ref, load_ref, nch_ref,
+             cores_ref, freq_ref, done_ref) = refs[len(consts):]
+            cvals = [r[:] for r in const_refs]
+            fields = lay.unpack_params(prow_ref[:])
+            carry = lay.unpack_state(f0_ref[:], i0_ref[:])
+            kin = ScanInputs(state0=carry[1],
+                             bw=jnp.ones((), jnp.float32), **fields)
+
+            zf = jnp.zeros((n_steps,), jnp.float32)
+            for ref in (tput_ref, power_ref, load_ref, nch_ref, freq_ref):
+                ref[:] = zf
+            cores_ref[:] = jnp.zeros((n_steps,), jnp.int32)
+            done_ref[:] = jnp.ones((n_steps,), jnp.int32)
+
+            def cond(c):
+                i, (sim, _) = c
+                return jnp.logical_and(i < n_steps,
+                                       jnp.sum(sim.remaining_mb) > 0.0)
+
+            def body(c):
+                i, carry = c
+                carry, m = tick_fn(kin, carry, (i, bw_ref[i]), *cvals)
+                tput_ref[i] = m.tput_mbps
+                power_ref[i] = m.power_w
+                load_ref[i] = m.cpu_load
+                nch_ref[i] = m.num_ch
+                cores_ref[i] = m.cores
+                freq_ref[i] = m.freq_ghz
+                done_ref[i] = m.done.astype(jnp.int32)
+                return i + 1, carry
+
+            _, (sim, ts) = jax.lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), carry))
+            f32, i32 = lay.pack_state(sim, ts)
+            fout_ref[:] = f32
+            iout_ref[:] = i32
+
+        out_shape = [
+            jax.ShapeDtypeStruct((lay.f32_size,), jnp.float32),
+            jax.ShapeDtypeStruct((lay.i32_size,), jnp.int32),
+        ] + [jax.ShapeDtypeStruct((n_steps,), jnp.float32)] * 4 + [
+            jax.ShapeDtypeStruct((n_steps,), jnp.int32),   # cores
+            jax.ShapeDtypeStruct((n_steps,), jnp.float32),  # freq_ghz
+            jax.ShapeDtypeStruct((n_steps,), jnp.int32),   # done
+        ]
+        kwargs = {}
+        if interpret:
+            kwargs["interpret"] = True
+        else:
+            from repro.kernels import pallas_compat
+            kwargs["compiler_params"] = pallas_compat.CompilerParams()
+        f32, i32, tput, power, load, nch, cores, freq, done = pl.pallas_call(
+            kernel, out_shape=out_shape, **kwargs)(prow, bw, f0, i0, *consts)
+        sim, ts = lay.unpack_state(f32, i32)
+        metrics = TickMetrics(tput_mbps=tput, power_w=power, cpu_load=load,
+                              num_ch=nch, cores=cores, freq_ghz=freq,
+                              done=done.astype(jnp.bool_))
+        return sim, ts, metrics
+
+    return core
+
+
+# ------------------------------------------------------------ caches ------
+#
+# Compiled runners are cached in explicit per-family dicts keyed on the
+# hashable (controller code, env code, cpu, shape..., executor) tuple —
+# the same things that select compiled code.  Unlike the old
+# functools.lru_cache(maxsize=None) decorators these are inspectable and
+# clearable: long-lived processes (pytest sessions, tuning loops) call
+# clear_runner_caches() to drop every compiled executable at once.
+
+_CACHES: dict[str, dict] = {
+    "runner": {}, "wave": {}, "sharded_wave": {}, "sharded": {},
+}
+
+
+def clear_runner_caches() -> None:
+    """Drop every cached compiled runner (figure-grid, wave, and sharded).
+
+    Safe at any time — the next ``get_*_runner`` call rebuilds and
+    recompiles.  Test fixtures call this between modules so repeated sweeps
+    in one process stop accumulating compiled executables without bound.
+    """
+    for cache in _CACHES.values():
+        cache.clear()
+
+
+def runner_cache_sizes() -> dict[str, int]:
+    """Entries per runner-cache family (observability / leak tests)."""
+    return {name: len(cache) for name, cache in _CACHES.items()}
+
+
+def _cached(family: str, key: tuple, build):
+    cache = _CACHES[family]
+    if key not in cache:
+        cache[key] = build()
+    return cache[key]
+
+
 def get_runner(controller_code, env_code, cpu: CpuProfile, n_steps: int,
                dt: float, ctrl_every: int, batched: bool,
                early_exit: bool = True, chunk: Optional[int] = None,
-               observe: bool = False):
+               observe: bool = False, executor: str = "auto"):
     """Jitted (and optionally vmapped) engine core, cached per code group.
 
     ``controller_code`` must be a canonical (numerics-stripped, hashable)
@@ -383,13 +669,22 @@ def get_runner(controller_code, env_code, cpu: CpuProfile, n_steps: int,
     share one compiled executable.  When vmapped, the early-exit loop stops
     once *all* lanes of the batch are done (``repro.api.sweep`` keeps groups
     shape-compatible, so lanes tend to finish at similar times).
+
+    ``executor`` is resolved first (:func:`resolve_executor`), so
+    ``"auto"`` and its backend-resolved name share one cache entry.
     """
-    core = build_core(controller_code, env_code, cpu, n_steps=n_steps, dt=dt,
-                      ctrl_every=ctrl_every, early_exit=early_exit,
-                      chunk=chunk, observe=observe)
-    if batched:
-        core = jax.vmap(core)
-    return jax.jit(core)
+    executor = resolve_executor(executor, observe=observe)
+    key = (controller_code, env_code, cpu, n_steps, dt, ctrl_every,
+           batched, early_exit, chunk, observe, executor)
+
+    def build():
+        core = build_core(controller_code, env_code, cpu, n_steps=n_steps,
+                          dt=dt, ctrl_every=ctrl_every,
+                          early_exit=early_exit, chunk=chunk,
+                          observe=observe, executor=executor)
+        return jax.jit(jax.vmap(core) if batched else core)
+
+    return _cached("runner", key, build)
 
 
 # ------------------------------------------------------------ wave hooks --
@@ -400,20 +695,30 @@ def get_runner(controller_code, env_code, cpu: CpuProfile, n_steps: int,
 # refills from the arrival queue, and rescales per-transfer bandwidth for
 # NIC contention.  That needs two things the figure-grid runners don't have:
 #
-#   * resumable carries — a wave starts from the (SimState, TunerState) the
-#     previous wave produced, with the global step index threaded through so
+#   * resumable carries — a wave starts from the state the previous wave
+#     produced, with the global step index threaded through so
 #     controller-tick alignment (``step_idx % ctrl_every``) survives wave
 #     boundaries;
-#   * a scalar per-lane bandwidth share — ``ScanInputs.bw`` carries one
-#     float (the host NIC share for this wave) instead of an [n_steps]
-#     schedule, and is broadcast across the wave's ticks.
+#   * a scalar per-lane bandwidth share — one float (the host NIC share for
+#     this wave) instead of an [n_steps] schedule, broadcast across the
+#     wave's ticks.
 #
-# The wave core shares ``make_step_fn`` with the figure-grid runners, so a
-# transfer that never experiences contention is bit-identical between the
-# two paths (tests/test_fleet.py).  Waves return only the final carries plus
-# the absolute tick at which the lane drained (-1 if still live): per-tick
-# traces would be O(fleet size x horizon) and fleet metrics only need
-# completion tick + the frozen ``energy_j`` / ``bytes_moved``.
+# Two wave carry forms exist, selected by ``executor``:
+#
+#   * ``reference`` — pytree carries (``ScanInputs``, SimState, TunerState),
+#     exactly the PR 3 contract;
+#   * ``blocked`` — flat ``TickState`` rows: the runner takes
+#     ``(params_row [B, 13+5P], bw [B], state_f32 [B, 2P+9],
+#     state_i32 [B, 3], step0 [B])`` and returns the advanced rows.  A
+#     host-side lane is then two ndarray rows, a wave batch is five
+#     ``np.stack`` calls, and the sharded runner donates the state buffers.
+#
+# Both share ``make_step_fn``, so a transfer that never experiences
+# contention is bit-identical between the wave path and ``api.run``
+# (tests/test_fleet.py, tests/test_executors.py).  Waves return only the
+# final carries plus the absolute tick at which the lane drained (-1 if
+# still live): per-tick traces would be O(fleet size x horizon) and fleet
+# metrics only need completion tick + the frozen energy/bytes counters.
 
 
 def build_wave_core(controller, env, cpu: CpuProfile, *, wave_steps: int,
@@ -447,52 +752,136 @@ def build_wave_core(controller, env, cpu: CpuProfile, *, wave_steps: int,
     return core
 
 
-@functools.lru_cache(maxsize=None)
+def build_blocked_wave_core(controller, env, cpu: CpuProfile, *,
+                            wave_steps: int, dt: float, ctrl_every: int,
+                            n_partitions: int):
+    """Flat-carry wave core: (params_row, bw, f32, i32, step0) ->
+    (f32', i32', done_at).
+
+    The per-lane rows follow :class:`repro.core.tickstate.TickLayout` for
+    ``n_partitions``; ``ScanInputs`` is reconstructed from the parameter
+    row inside the trace (pure slicing), the tick itself is the shared
+    :func:`make_step_fn` with the network advance in ``step_arrays`` form,
+    and the advanced state is re-packed on the way out — bit-identical to
+    :func:`build_wave_core` by construction.
+    """
+    lay = tickstate.TickLayout(n_partitions)
+    lowered = _LoweredEnv(env, lay)
+
+    def core(params_row, bw, f32, i32, step0):
+        fields = lay.unpack_params(params_row)
+        sim0, ts0 = lay.unpack_state(f32, i32)
+        inp = ScanInputs(state0=ts0, bw=bw, **fields)
+        step = make_step_fn(controller, lowered, cpu, inp, dt=dt,
+                            ctrl_every=ctrl_every)
+
+        def wave_step(carry, xs):
+            carry, m = step(carry, xs)
+            return carry, m.done
+
+        idx = step0 + jnp.arange(wave_steps, dtype=jnp.int32)
+        bws = jnp.broadcast_to(jnp.asarray(bw, jnp.float32), (wave_steps,))
+        (sim, ts), done = jax.lax.scan(wave_step, (sim0, ts0), (idx, bws))
+        done_at = jnp.where(done[-1],
+                            step0 + jnp.argmax(done).astype(jnp.int32),
+                            jnp.asarray(-1, jnp.int32))
+        f32_out, i32_out = lay.pack_state(sim, ts)
+        return f32_out, i32_out, done_at
+
+    return core
+
+
+def _resolve_wave_executor(executor: str, n_partitions) -> str:
+    """Wave runners support ``reference`` and ``blocked``; a ``pallas``
+    resolution falls back to ``blocked`` (bit-identical), which is the
+    executor the wave batching was shaped for."""
+    executor = resolve_executor(executor)
+    if executor == "pallas":
+        executor = "blocked"
+    if executor == "blocked" and n_partitions is None:
+        raise ValueError("blocked wave runners need n_partitions (the "
+                         "static TickLayout width)")
+    return executor
+
+
 def get_wave_runner(controller_code, env_code, cpu: CpuProfile,
-                    wave_steps: int, dt: float, ctrl_every: int):
+                    wave_steps: int, dt: float, ctrl_every: int,
+                    executor: str = "auto",
+                    n_partitions: Optional[int] = None):
     """Jitted, vmapped wave core, cached per (controller, environment) code
     group.
 
     Lanes are independent (no early-exit barrier inside a wave), so padding
     lanes with drained transfers (zero remaining bytes) is free: they are
-    frozen from tick 0.
+    frozen from tick 0.  With ``executor="blocked"`` the runner speaks the
+    flat-row contract of :func:`build_blocked_wave_core` and needs the
+    static ``n_partitions``.
     """
-    core = build_wave_core(controller_code, env_code, cpu,
-                           wave_steps=wave_steps, dt=dt,
-                           ctrl_every=ctrl_every)
-    return jax.jit(jax.vmap(core))
+    executor = _resolve_wave_executor(executor, n_partitions)
+    key = (controller_code, env_code, cpu, wave_steps, dt, ctrl_every,
+           executor, n_partitions)
+
+    def build():
+        if executor == "blocked":
+            core = build_blocked_wave_core(
+                controller_code, env_code, cpu, wave_steps=wave_steps,
+                dt=dt, ctrl_every=ctrl_every, n_partitions=n_partitions)
+        else:
+            core = build_wave_core(controller_code, env_code, cpu,
+                                   wave_steps=wave_steps, dt=dt,
+                                   ctrl_every=ctrl_every)
+        return jax.jit(jax.vmap(core))
+
+    return _cached("wave", key, build)
 
 
-@functools.lru_cache(maxsize=None)
 def get_sharded_wave_runner(controller_code, env_code, cpu: CpuProfile,
                             wave_steps: int, dt: float, ctrl_every: int,
-                            devices: tuple):
+                            devices: tuple, executor: str = "auto",
+                            n_partitions: Optional[int] = None):
     """Wave runner sharded over ``devices`` along the lane axis.
 
     Same contract as :func:`get_wave_runner`; lane batches must be padded to
     a multiple of ``len(devices)`` (``repro.distributed.sharding.pad_batch``
     with ``fill="zero"`` adds drained no-op lanes).  The carry buffers are
-    donated — each wave consumes the previous wave's output states.
+    donated — each wave consumes the previous wave's output states (the
+    flat f32/i32 state rows on the ``blocked`` path, the SimState/TunerState
+    pytrees on ``reference``).
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
 
-    mesh = shd.batch_mesh(devices)
-    core = build_wave_core(controller_code, env_code, cpu,
-                           wave_steps=wave_steps, dt=dt,
-                           ctrl_every=ctrl_every)
-    f = shd.shard_map(jax.vmap(core), mesh=mesh,
-                      in_specs=(P("batch"),) * 4,
-                      out_specs=P("batch"), check_vma=False)
-    return jax.jit(f, donate_argnums=(1, 2))
+    executor = _resolve_wave_executor(executor, n_partitions)
+    key = (controller_code, env_code, cpu, wave_steps, dt, ctrl_every,
+           devices, executor, n_partitions)
+
+    def build():
+        mesh = shd.batch_mesh(devices)
+        if executor == "blocked":
+            core = build_blocked_wave_core(
+                controller_code, env_code, cpu, wave_steps=wave_steps,
+                dt=dt, ctrl_every=ctrl_every, n_partitions=n_partitions)
+            f = shd.shard_map(jax.vmap(core), mesh=mesh,
+                              in_specs=(P("batch"),) * 5,
+                              out_specs=P("batch"), check_vma=False)
+            return jax.jit(f, donate_argnums=(2, 3))
+        core = build_wave_core(controller_code, env_code, cpu,
+                               wave_steps=wave_steps, dt=dt,
+                               ctrl_every=ctrl_every)
+        f = shd.shard_map(jax.vmap(core), mesh=mesh,
+                          in_specs=(P("batch"),) * 4,
+                          out_specs=P("batch"), check_vma=False)
+        return jax.jit(f, donate_argnums=(1, 2))
+
+    return _cached("sharded_wave", key, build)
 
 
-@functools.lru_cache(maxsize=None)
 def get_sharded_runner(controller_code, env_code, cpu: CpuProfile,
                        n_steps: int, dt: float, ctrl_every: int,
                        devices: tuple, early_exit: bool = True,
-                       chunk: Optional[int] = None):
+                       chunk: Optional[int] = None,
+                       executor: str = "auto"):
     """Batched engine core sharded over ``devices`` along the batch axis.
 
     Built with ``shard_map`` over a 1-D ``batch`` mesh, so each device runs
@@ -500,48 +889,36 @@ def get_sharded_runner(controller_code, env_code, cpu: CpuProfile,
     lanes all finish early stops scanning without waiting for the others.
     Input batches must be padded to a multiple of ``len(devices)``
     (``repro.distributed.sharding.pad_batch``) and placed with
-    ``shard_batch``; the jit donates the input buffers.
+    ``shard_batch``; the jit donates the input buffers.  A ``pallas``
+    resolution falls back to ``blocked`` here (bit-identical) — the fused
+    kernel composes with ``vmap`` but not yet with ``shard_map``.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
 
-    mesh = shd.batch_mesh(devices)
-    core = build_core(controller_code, env_code, cpu, n_steps=n_steps, dt=dt,
-                      ctrl_every=ctrl_every, early_exit=early_exit,
-                      chunk=chunk)
-    f = shd.shard_map(jax.vmap(core), mesh=mesh, in_specs=(P("batch"),),
-                      out_specs=P("batch"), check_vma=False)
-    return jax.jit(f, donate_argnums=0)
+    executor = resolve_executor(executor)
+    if executor == "pallas":
+        executor = "blocked"
+    key = (controller_code, env_code, cpu, n_steps, dt, ctrl_every,
+           devices, early_exit, chunk, executor)
+
+    def build():
+        mesh = shd.batch_mesh(devices)
+        core = build_core(controller_code, env_code, cpu, n_steps=n_steps,
+                          dt=dt, ctrl_every=ctrl_every,
+                          early_exit=early_exit, chunk=chunk,
+                          executor=executor)
+        f = shd.shard_map(jax.vmap(core), mesh=mesh, in_specs=(P("batch"),),
+                          out_specs=P("batch"), check_vma=False)
+        return jax.jit(f, donate_argnums=0)
+
+    return _cached("sharded", key, build)
 
 
-def simulate(
-    profile: NetworkProfile,
-    cpu: CpuProfile,
-    specs,
-    controller,
-    sla: Optional[SLA] = None,
-    *,
-    total_s: float = 3600.0,
-    dt: float = 0.1,
-    scaling: bool = True,
-    bw_schedule: Optional[np.ndarray] = None,
-    name: Optional[str] = None,
-) -> TransferResult:
-    """Deprecated shim over :func:`repro.api.run`.
-
-    ``controller`` is anything :func:`repro.api.as_controller` accepts: a
-    Controller, a registry name, an ``SLA`` (run the matching paper tuner),
-    or a legacy ``baselines.StaticController``.  ``sla`` is ignored (kept
-    for signature compatibility).
-    """
-    del sla
-    warnings.warn("repro.core.simulate is deprecated; use repro.api.Scenario "
-                  "with repro.api.run/sweep", DeprecationWarning,
-                  stacklevel=2)
-    from repro import api
-    scenario = api.Scenario(
-        profile=profile, cpu=cpu, datasets=tuple(specs),
-        controller=api.as_controller(controller, scaling=scaling),
-        total_s=total_s, dt=dt, bw_schedule=bw_schedule, name=name)
-    return api.run(scenario)
+def __getattr__(name):
+    if name == "simulate":
+        raise AttributeError(
+            "repro.core.engine.simulate was removed: build a "
+            "repro.api.Scenario and call repro.api.run (or repro.api.sweep)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

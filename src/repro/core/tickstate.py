@@ -1,0 +1,232 @@
+"""Flat (structure-of-arrays) lowering of the engine's tick state.
+
+The engine's semantics are defined over nested pytrees — ``SimState`` +
+``TunerState`` carries and a ``ScanInputs`` parameter bundle — because
+that is the shape controllers and environments are written against.  The
+flat executors (``blocked``, ``pallas`` — see ``repro.core.engine``) and
+the fleet wave scheduler instead move state around as two dense rows:
+
+* one ``float32`` vector of ``2 * P + 9`` slots
+  (``remaining_mb[P] · window_mb[P] · t · energy_j · bytes_moved ·
+  num_ch · prev_num_ch · ref · acc_mb · acc_j · acc_s``), and
+* one ``int32`` vector of 3 slots (``fsm · cores · freq_idx``),
+
+plus a ``13 + 5 * P`` parameter row (``NetParams`` scalars, ``SLAParams``
+scalars, then the five per-partition arrays).  A host-side fleet lane is
+therefore two ndarray rows instead of a 14-leaf pytree, and a wave batch
+stacks with a handful of ``np.stack`` calls instead of hundreds of
+``tree_map``s.
+
+The pack/unpack adapters here are *pure concatenation and slicing* — no
+arithmetic, no dtype conversion — so ``unpack(pack(x)) == x`` bit-for-bit
+(property-tested in tests/test_executors.py).  That exactness is what
+lets the flat executors inherit the reference engine's golden outputs for
+free.
+
+:class:`TickLayout` is the single source of truth for slot offsets; both
+``jnp`` (traced) and ``np`` (host) callers use the same functions via the
+``xp`` argument.  :func:`lower_network_step` derives the array-form
+network step the protocol documents (``NetworkModel.step_arrays``) from
+the pytree ``step`` when a model does not provide a native one.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .types import NetParams, SimState, SLAParams, TunerState
+
+# Scalar slots appended after the two [P] blocks of the f32 state row.
+_SIM_SCALARS = ("t", "energy_j", "bytes_moved")
+_TS_F32 = ("num_ch", "prev_num_ch", "ref", "acc_mb", "acc_j", "acc_s")
+_TS_I32 = ("fsm", "cores", "freq_idx")
+
+N_NET = len(NetParams._fields)          # 6
+N_SLA = len(SLAParams._fields)          # 7
+# Per-partition [P] arrays in the parameter row, in order.
+_PARAM_VECTORS = ("pp", "par", "total_mb", "avg_file_mb", "static_w")
+
+
+class TickLayout:
+    """Slot offsets of the flat state / parameter rows for ``P`` partitions.
+
+    Hashable and cheap; executors build one per (static) partition count at
+    trace time.  ``sim_size`` is the prefix of the f32 row holding the
+    :class:`SimState` portion — the boundary :func:`lower_network_step`
+    operates across.
+    """
+
+    __slots__ = ("n_partitions", "sim_size", "f32_size", "i32_size",
+                 "params_size", "off_t", "off_energy", "off_bytes")
+
+    def __init__(self, n_partitions: int):
+        p = int(n_partitions)
+        if p < 1:
+            raise ValueError(f"need at least one partition, got {p}")
+        self.n_partitions = p
+        self.sim_size = 2 * p + len(_SIM_SCALARS)
+        self.f32_size = self.sim_size + len(_TS_F32)
+        self.i32_size = len(_TS_I32)
+        self.params_size = N_NET + N_SLA + len(_PARAM_VECTORS) * p
+        self.off_t = 2 * p
+        self.off_energy = 2 * p + 1
+        self.off_bytes = 2 * p + 2
+
+    def __eq__(self, other):
+        return (type(other) is TickLayout
+                and other.n_partitions == self.n_partitions)
+
+    def __hash__(self):
+        return hash((TickLayout, self.n_partitions))
+
+    # ---------------------------------------------------------- state ----
+
+    def pack_sim(self, sim: SimState, xp=jnp):
+        """SimState -> f32 row prefix [sim_size].  Pure concatenation."""
+        return xp.concatenate([
+            xp.asarray(sim.remaining_mb, xp.float32),
+            xp.asarray(sim.window_mb, xp.float32),
+            xp.stack([xp.asarray(getattr(sim, f), xp.float32)
+                      for f in _SIM_SCALARS]),
+        ])
+
+    def unpack_sim(self, row) -> SimState:
+        """f32 row prefix -> SimState.  Pure slicing."""
+        p = self.n_partitions
+        return SimState(
+            remaining_mb=row[..., 0:p],
+            window_mb=row[..., p:2 * p],
+            t=row[..., self.off_t],
+            energy_j=row[..., self.off_energy],
+            bytes_moved=row[..., self.off_bytes],
+        )
+
+    def pack_state(self, sim: SimState, ts: TunerState, xp=jnp):
+        """(SimState, TunerState) -> (f32 row, i32 row).  Bit-exact inverse
+        of :meth:`unpack_state`."""
+        f32 = xp.concatenate([
+            self.pack_sim(sim, xp=xp),
+            xp.stack([xp.asarray(getattr(ts, f), xp.float32)
+                      for f in _TS_F32]),
+        ])
+        i32 = xp.stack([xp.asarray(getattr(ts, f), xp.int32)
+                        for f in _TS_I32])
+        return f32, i32
+
+    def unpack_state(self, f32, i32) -> tuple[SimState, TunerState]:
+        """(f32 row, i32 row) -> (SimState, TunerState).  Pure slicing."""
+        s = self.sim_size
+        ts = TunerState(
+            fsm=i32[..., 0], cores=i32[..., 1], freq_idx=i32[..., 2],
+            num_ch=f32[..., s + 0], prev_num_ch=f32[..., s + 1],
+            ref=f32[..., s + 2], acc_mb=f32[..., s + 3],
+            acc_j=f32[..., s + 4], acc_s=f32[..., s + 5],
+        )
+        return self.unpack_sim(f32[..., :s]), ts
+
+    # ------------------------------------------------------ parameters ----
+
+    def pack_params(self, inp, xp=jnp):
+        """ScanInputs (minus ``state0``/``bw``) -> parameter row.
+
+        The row carries everything the per-tick step function reads from
+        ``ScanInputs``: the NetParams and SLAParams scalars plus the five
+        per-partition vectors.  ``state0`` travels as a flat state row and
+        ``bw`` as its own argument, so one combo row is shared by every
+        lane of a fleet wave.
+        """
+        parts = [xp.stack([xp.asarray(getattr(inp.net, f), xp.float32)
+                           for f in NetParams._fields]),
+                 xp.stack([xp.asarray(getattr(inp.sla, f), xp.float32)
+                           for f in SLAParams._fields])]
+        parts += [xp.asarray(getattr(inp, f), xp.float32)
+                  for f in _PARAM_VECTORS]
+        return xp.concatenate(parts)
+
+    def unpack_params(self, row) -> dict:
+        """Parameter row -> ScanInputs field dict (pure slicing).
+
+        Returns a dict (not a ScanInputs — the caller supplies ``state0``
+        and ``bw``) to keep this module import-free of the engine.
+        """
+        p = self.n_partitions
+        out = {
+            "net": NetParams(*[row[..., i] for i in range(N_NET)]),
+            "sla": SLAParams(*[row[..., N_NET + i] for i in range(N_SLA)]),
+        }
+        base = N_NET + N_SLA
+        for k, f in enumerate(_PARAM_VECTORS):
+            out[f] = row[..., base + k * p: base + (k + 1) * p]
+        return out
+
+    # ---------------------------------------------------- host readers ----
+
+    def remaining_sum(self, f32) -> float:
+        """Total bytes left, read straight off a (host) f32 row."""
+        return float(np.sum(f32[..., :self.n_partitions]))
+
+    def energy_j(self, f32) -> float:
+        return float(f32[..., self.off_energy])
+
+    def bytes_moved(self, f32) -> float:
+        return float(f32[..., self.off_bytes])
+
+
+def lower_network_step(network, lay: TickLayout):
+    """Array-form lowering of ``network.step``: operates on the packed
+    f32 ``SimState`` row instead of the pytree.
+
+    This is the protocol-level default documented on
+    ``repro.api.environments.NetworkModel``: if the model provides a native
+    ``step_arrays(lay, energy, net, cpu, sim_row, params, avg_file_mb, dt,
+    bw_scale) -> (sim_row', NetOut)`` (e.g. a hand-fused TPU kernel body),
+    it is used directly; otherwise one is derived from the pytree ``step``
+    through the bit-exact pack/unpack adapters — so the lowering never
+    changes numerics, only the state representation.
+    """
+    native = getattr(network, "step_arrays", None)
+    if native is not None:
+        def step_arrays(energy, net, cpu, sim_row, params, avg_file_mb, dt,
+                        bw_scale):
+            return native(lay, energy, net, cpu, sim_row, params,
+                          avg_file_mb, dt, bw_scale)
+        return step_arrays
+
+    def step_arrays(energy, net, cpu, sim_row, params, avg_file_mb, dt,
+                    bw_scale):
+        sim = lay.unpack_sim(sim_row)
+        sim2, out = network.step(energy, net, cpu, sim, params, avg_file_mb,
+                                 dt, bw_scale)
+        return lay.pack_sim(sim2), out
+
+    return step_arrays
+
+
+class ArrayLoweredNetwork:
+    """A NetworkModel view whose per-tick advance routes through the
+    array-form :func:`lower_network_step` lowering.
+
+    The flat executors wrap the environment's network with this so every
+    tick consumes the lowered ``step_arrays`` form (native or derived);
+    with the derived default the composition is ``unpack . pack . step``
+    — bit-identical to calling ``step`` directly.
+    """
+
+    def __init__(self, network, lay: TickLayout):
+        self._inner = network
+        self._lay = lay
+        self._step_arrays = lower_network_step(network, lay)
+        self.name = network.name
+
+    def code(self):
+        return self._inner.code()
+
+    def init_state(self, total_mb, net) -> SimState:
+        return self._inner.init_state(total_mb, net)
+
+    def step(self, energy, net, cpu, state, params, avg_file_mb, dt,
+             bw_scale):
+        row, out = self._step_arrays(energy, net, cpu,
+                                     self._lay.pack_sim(state), params,
+                                     avg_file_mb, dt, bw_scale)
+        return self._lay.unpack_sim(row), out

@@ -33,6 +33,13 @@ completion masking, a transfer that never sees contention (bandwidth share
 same scenario — tested in tests/test_fleet.py.  All scheduling decisions
 are functions of (arrival time, request content), never of trace order, so
 shuffling a trace leaves every fleet number unchanged.
+
+Lane state is held host-side as the flat ``repro.core.tickstate`` rows, so
+on the default ``blocked`` executor a wave batch is five ``np.stack`` calls
+(parameter rows, shares, two state rows, step indices) instead of per-lane
+pytree stack/unstack traffic — which was the dominant host cost of the
+fleet hot loop.  ``executor="reference"`` keeps the pytree wave contract as
+the golden parity path.
 """
 from __future__ import annotations
 
@@ -47,9 +54,8 @@ import numpy as np
 from repro.api.controllers import as_controller
 from repro.api.environments import as_environment
 from repro.api.scenario import ctrl_stride, pad_partition_inputs
-from repro.core import engine
+from repro.core import engine, tickstate
 from repro.core.engine import ScanInputs
-from repro.core.types import SimState
 
 from .aggregates import FleetReport, FleetTransfer, HostStats
 from .arrivals import TransferRequest, request_sort_key
@@ -60,8 +66,8 @@ class _Combo:
     """Prepared admission state for one unique
     (controller, datasets, profile, cpu, environment) combination."""
 
-    __slots__ = ("inputs", "state0", "sim0", "key", "ctrl_name", "env",
-                 "n_partitions", "ideal_s")
+    __slots__ = ("inputs", "state0", "params_row", "f0", "i0", "key",
+                 "ctrl_name", "env", "n_partitions", "ideal_s")
 
     def __init__(self, req: TransferRequest, host: Host, dt: float):
         ctrl = as_controller(req.controller)
@@ -73,7 +79,9 @@ class _Combo:
         inputs = inputs._replace(bw=np.float32(1.0))
         self.inputs = jax.tree.map(np.asarray, inputs)
         self.state0 = jax.tree.map(np.asarray, ci.state)
-        self.sim0 = None               # set by finalize()
+        self.params_row = None         # set by finalize()
+        self.f0 = None
+        self.i0 = None
         self.env = env
         self.key = (ctrl.code(), env.code(), host.cpu,
                     ctrl_stride(ctrl, dt))
@@ -83,26 +91,34 @@ class _Combo:
         self.ideal_s = total_mb / max(req.profile.bandwidth_mbps, 1e-9)
 
     def finalize(self, n_partitions: int) -> None:
-        """Widen to the trace-wide partition count and build the tick-0
-        state through the environment's NetworkModel (numpy leaves — one
-        jax dispatch per combo, shared by every admission of it)."""
+        """Widen to the trace-wide partition count and pack the flat
+        admission rows: the shared parameter row plus the tick-0 state rows
+        (through the environment's NetworkModel), all host-side numpy — one
+        pack per combo, shared by every admission of it."""
         self.inputs = pad_partition_inputs(self.inputs, n_partitions)
-        self.sim0 = jax.tree.map(
+        lay = tickstate.TickLayout(n_partitions)
+        sim0 = jax.tree.map(
             np.asarray,
             self.env.network.init_state(self.inputs.total_mb,
                                         self.inputs.net))
+        self.params_row = lay.pack_params(self.inputs, xp=np)
+        self.f0, self.i0 = lay.pack_state(sim0, self.state0, xp=np)
 
 
 @dataclasses.dataclass
 class _Lane:
-    """One in-flight transfer (mutable host-side bookkeeping)."""
+    """One in-flight transfer (mutable host-side bookkeeping).
+
+    The engine carry lives as the two flat ``TickLayout`` rows — stacking a
+    wave batch is a handful of ``np.stack`` calls instead of per-lane
+    pytree traffic, which was the fleet hot loop's dominant host cost."""
 
     seq: int                       # admission order (stable report order)
     req: TransferRequest
     host_idx: int
     combo: _Combo
-    sim: SimState                  # numpy pytree carries
-    ts: object
+    st_f32: np.ndarray             # flat f32 state row (TickLayout)
+    st_i32: np.ndarray             # flat i32 state row (TickLayout)
     start_s: float
     budget_steps: int
     steps_done: int = 0
@@ -139,52 +155,84 @@ def _stack(trees):
 
 
 def _run_wave_group(key, lanes: list, shares: list, wave_steps: int,
-                    dt: float, devices) -> None:
-    """Advance one controller-code group of lanes by one wave, in place."""
+                    dt: float, devices, lay: tickstate.TickLayout,
+                    executor: str) -> None:
+    """Advance one controller-code group of lanes by one wave, in place.
+
+    On the ``blocked`` executor (the default resolution) a wave batch is
+    five ``np.stack``/``np.asarray`` calls over the lanes' flat rows; the
+    ``reference`` executor is the parity path — it unpacks the rows into
+    the pytree wave contract (batched, pure numpy slicing) and repacks per
+    lane afterwards, bit-identical by construction.
+    """
     from repro.distributed import sharding as shd
 
     code, env_code, cpu, ctrl_every = key
     n = len(lanes)
-    batch = (
-        _stack([ln.combo.inputs._replace(bw=np.float32(s))
-                for ln, s in zip(lanes, shares)]),
-        _stack([ln.sim for ln in lanes]),
-        _stack([ln.ts for ln in lanes]),
-        np.asarray([ln.steps_done for ln in lanes], np.int32),
-    )
+    step0 = np.asarray([ln.steps_done for ln in lanes], np.int32)
+    f32 = np.stack([ln.st_f32 for ln in lanes])
+    i32 = np.stack([ln.st_i32 for ln in lanes])
+    if executor == "blocked":
+        batch = (
+            np.stack([ln.combo.params_row for ln in lanes]),
+            np.asarray(shares, np.float32),
+            f32, i32, step0,
+        )
+    else:
+        sim, ts = lay.unpack_state(f32, i32)
+        batch = (
+            _stack([ln.combo.inputs._replace(bw=np.float32(s))
+                    for ln, s in zip(lanes, shares)]),
+            sim, ts, step0,
+        )
     # Power-of-two lane buckets bound the number of distinct compiled
     # shapes per group to O(log max_concurrency); the filler lanes are
     # zeroed, i.e. born drained, and cost nothing.
     bucket = 1 << max(n - 1, 0).bit_length()
     ndev = len(devices) if devices is not None else 1
+    n_parts = lay.n_partitions if executor == "blocked" else None
     if ndev > 1 and n >= ndev:
         bucket = -(-bucket // ndev) * ndev
         batch, _ = shd.pad_batch(batch, bucket, fill="zero")
         mesh = shd.batch_mesh(devices)
         runner = engine.get_sharded_wave_runner(
-            code, env_code, cpu, wave_steps, dt, ctrl_every, tuple(devices))
-        sim, ts, done_at = runner(*shd.shard_batch(batch, mesh))
+            code, env_code, cpu, wave_steps, dt, ctrl_every, tuple(devices),
+            executor=executor, n_partitions=n_parts)
+        out = runner(*shd.shard_batch(batch, mesh))
     else:
         batch, _ = shd.pad_batch(batch, bucket, fill="zero")
         runner = engine.get_wave_runner(code, env_code, cpu, wave_steps, dt,
-                                        ctrl_every)
-        sim, ts, done_at = runner(*batch)
-    sim = jax.tree.map(np.asarray, sim)
-    ts = jax.tree.map(np.asarray, ts)
-    done_at = np.asarray(done_at)
-    for b, ln in enumerate(lanes):
-        ln.sim = jax.tree.map(lambda x: x[b], sim)
-        ln.ts = jax.tree.map(lambda x: x[b], ts)
-        ln.steps_done += wave_steps
-        if ln.done_at < 0:
-            ln.done_at = int(done_at[b])
+                                        ctrl_every, executor=executor,
+                                        n_partitions=n_parts)
+        out = runner(*batch)
+    if executor == "blocked":
+        f32o, i32o, done_at = (np.asarray(x) for x in out)
+        for b, ln in enumerate(lanes):
+            ln.st_f32 = f32o[b]
+            ln.st_i32 = i32o[b]
+            ln.steps_done += wave_steps
+            if ln.done_at < 0:
+                ln.done_at = int(done_at[b])
+    else:
+        sim, ts, done_at = out
+        sim = jax.tree.map(np.asarray, sim)
+        ts = jax.tree.map(np.asarray, ts)
+        done_at = np.asarray(done_at)
+        for b, ln in enumerate(lanes):
+            ln.st_f32, ln.st_i32 = lay.pack_state(
+                jax.tree.map(lambda x: x[b], sim),
+                jax.tree.map(lambda x: x[b], ts), xp=np)
+            ln.steps_done += wave_steps
+            if ln.done_at < 0:
+                ln.done_at = int(done_at[b])
 
 
 def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
               wave_s: float = 30.0, dt: float = 0.1,
               horizon_s: Optional[float] = None,
               assignment: str = "least-loaded",
-              devices: Optional[Sequence] = None) -> FleetReport:
+              devices: Optional[Sequence] = None,
+              executor: str = "auto") -> FleetReport:
     """Run an arrival trace against a host pool; see the module docstring.
 
     ``wave_s`` is the scheduling quantum: admissions and bandwidth rescaling
@@ -193,6 +241,9 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     the fleet runs until every transfer completes or exhausts its budget.
     ``devices`` selects accelerator devices for lane sharding (default: all
     local devices; single-device hosts use the plain vmapped runner).
+    ``executor`` picks the engine lowering for the wave runners (every
+    executor is bit-identical; a ``pallas`` resolution falls back to
+    ``blocked``, the executor the wave batching is shaped for).
     """
     hosts = tuple(hosts)
     if not hosts:
@@ -202,6 +253,9 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
         raise ValueError(f"wave_s={wave_s} shorter than dt={dt}")
     if devices is None:
         devices = jax.devices()
+    executor = engine.resolve_executor(executor)
+    if executor == "pallas":
+        executor = "blocked"
 
     reqs = sorted(trace, key=request_sort_key)
 
@@ -239,6 +293,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     for c in combos.values():
         c.finalize(p_max)
     finalized = True
+    lay = tickstate.TickLayout(max(p_max, 1))
 
     lanes: list[_Lane] = []
     waiting: list[TransferRequest] = []
@@ -254,7 +309,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     waves_run = 0
 
     def retire(ln: _Lane) -> None:
-        completed = bool(np.sum(ln.sim.remaining_mb) <= 0.0)
+        completed = lay.remaining_sum(ln.st_f32) <= 0.0
         if completed:
             time_s = float(dt * (ln.done_at + 1))
         else:
@@ -266,8 +321,8 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             arrival_s=ln.req.arrival_s,
             start_s=ln.start_s,
             time_s=time_s,
-            energy_j=float(ln.sim.energy_j),
-            moved_mb=float(ln.sim.bytes_moved),
+            energy_j=lay.energy_j(ln.st_f32),
+            moved_mb=lay.bytes_moved(ln.st_f32),
             completed=completed,
             ideal_s=ln.combo.ideal_s,
         ))
@@ -289,8 +344,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             combo = combo_for(req, hosts[h])
             lanes.append(_Lane(
                 seq=seq, req=req, host_idx=h, combo=combo,
-                sim=combo.sim0,
-                ts=combo.state0, start_s=now,
+                st_f32=combo.f0, st_i32=combo.i0, start_s=now,
                 budget_steps=max(int(round(req.total_s / dt)), 1)))
             seq += 1
             active[h] += 1
@@ -311,18 +365,18 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
         share = [min(1.0, hosts[i].nic_mbps / d) if d > 0 else 1.0
                  for i, d in enumerate(demand)]
 
-        moved_before = [float(ln.sim.bytes_moved) for ln in lanes]
+        moved_before = [lay.bytes_moved(ln.st_f32) for ln in lanes]
         groups: dict[tuple, list[int]] = defaultdict(list)
         for i, ln in enumerate(lanes):
             groups[ln.combo.key].append(i)
         for key, idxs in groups.items():
             _run_wave_group(key, [lanes[i] for i in idxs],
                             [share[lanes[i].host_idx] for i in idxs],
-                            wave_steps, dt, devices)
+                            wave_steps, dt, devices, lay, executor)
 
         hosts_active = set()
         for before, ln in zip(moved_before, lanes):
-            moved_mb[ln.host_idx] += float(ln.sim.bytes_moved) - before
+            moved_mb[ln.host_idx] += lay.bytes_moved(ln.st_f32) - before
             hosts_active.add(ln.host_idx)
         for h in hosts_active:
             busy_waves[h] += 1
@@ -330,7 +384,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
 
         live = []
         for ln in lanes:
-            done = bool(np.sum(ln.sim.remaining_mb) <= 0.0)
+            done = lay.remaining_sum(ln.st_f32) <= 0.0
             if done or ln.steps_done >= ln.budget_steps:
                 retire(ln)
             else:

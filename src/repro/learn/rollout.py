@@ -61,10 +61,14 @@ def run_observed(scenarios: Sequence) -> list[ObservedRun]:
 
     results: list = [None] * len(prepared)
     for key, idxs in groups.items():
+        # The fused pallas kernel has no observation outputs; fall back to
+        # the bit-identical blocked executor for observed runs (an explicit
+        # Scenario.executor="reference" is still honored).
+        ex = "blocked" if key.executor == "pallas" else key.executor
         if len(idxs) == 1:
             runner = engine.get_runner(
                 key.ctrl_code, key.env_code, key.cpu, key.n_steps, key.dt,
-                key.ctrl_every, batched=False, observe=True)
+                key.ctrl_every, batched=False, observe=True, executor=ex)
             out = runner(prepared[idxs[0]].inputs)
             batch = [(idxs[0], out)]
         else:
@@ -72,7 +76,7 @@ def run_observed(scenarios: Sequence) -> list[ObservedRun]:
                                    *[prepared[i].inputs for i in idxs])
             runner = engine.get_runner(
                 key.ctrl_code, key.env_code, key.cpu, key.n_steps, key.dt,
-                key.ctrl_every, batched=True, observe=True)
+                key.ctrl_every, batched=True, observe=True, executor=ex)
             sim, ts, metrics, obs = runner(stacked)
             batch = [(i, jax.tree.map(lambda x, b=b: x[b],
                                       (sim, ts, metrics, obs)))

@@ -1,8 +1,24 @@
 import os
 import sys
 
+import pytest
+
 # Tests run on the single real CPU device (the 512-device override is
 # strictly dryrun.py's).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_runner_caches():
+    """Drop compiled engine runners after each test module.
+
+    Keeps runners warm within a module (tests that share a grid share its
+    compiles) while bounding cache growth across the whole session —
+    repeated sweeps in one process otherwise accumulate compiled
+    executables without bound."""
+    yield
+    from repro.core import engine
+
+    engine.clear_runner_caches()

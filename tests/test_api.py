@@ -1,10 +1,10 @@
 """Tests for the repro.api surface: registry, Scenario run/sweep batching,
-and the legacy ``repro.core.simulate`` shim."""
+and the removal tombstones of the pre-PR 2 legacy surface."""
 import numpy as np
 import pytest
 
 from repro import api
-from repro.core import SLA, SLAPolicy, CpuProfile, simulate
+from repro.core import CpuProfile
 from repro.core.baselines import BASELINE_BUILDERS
 from repro.core.types import CHAMELEON, CLOUDLAB, DatasetSpec
 
@@ -103,12 +103,11 @@ def test_noscale_naming():
     assert api.make_controller("eemt").name == "EEMT"
 
 
-def test_avg_tput_mbps_alias_is_deprecated():
+def test_avg_tput_mbps_alias_removed():
     r = api.run(api.Scenario(profile=CHAMELEON, datasets=FAST,
                              controller="wget/curl", total_s=TOTAL_S))
-    with pytest.deprecated_call():
-        legacy = r.avg_tput_mbps
-    assert legacy == r.avg_tput_MBps           # same MB/s value
+    with pytest.raises(AttributeError, match="avg_tput_MBps"):
+        r.avg_tput_mbps
     np.testing.assert_allclose(r.avg_tput_gbps,
                                r.avg_tput_MBps * 8.0 / 1000.0)
 
@@ -192,35 +191,18 @@ def test_bw_schedule_roundtrip():
     assert r.energy_j != flat.energy_j or r.time_s != flat.time_s
 
 
-# ---------------------------------------------------------- legacy shim ---
+# ------------------------------------------------------ legacy tombstones ---
 
-def _assert_same_result(a, b):
-    assert a.name == b.name
-    assert a.completed == b.completed
-    np.testing.assert_allclose(a.time_s, b.time_s, rtol=1e-6)
-    np.testing.assert_allclose(a.energy_j, b.energy_j, rtol=1e-5)
-    np.testing.assert_allclose(a.avg_tput_MBps, b.avg_tput_MBps, rtol=1e-5)
-    np.testing.assert_allclose(a.avg_power_w, b.avg_power_w, rtol=1e-5)
+def test_legacy_simulate_removed():
+    import repro.core
+    import repro.core.engine
 
-
-def test_legacy_simulate_shim_tuner():
-    sla = SLA(policy=SLAPolicy.MAX_THROUGHPUT, max_ch=64)
-    with pytest.deprecated_call():
-        legacy = simulate(CHAMELEON, CPU, FAST, sla, total_s=TOTAL_S)
-    new = api.run(api.Scenario(profile=CHAMELEON, datasets=FAST,
-                               controller=api.TunerController(sla=sla),
-                               cpu=CPU, total_s=TOTAL_S))
-    _assert_same_result(legacy, new)
-
-
-def test_legacy_simulate_shim_static_baseline():
-    ctrl = BASELINE_BUILDERS["ismail-max-tput"](FAST, CHAMELEON, CPU)
-    with pytest.deprecated_call():
-        legacy = simulate(CHAMELEON, CPU, FAST, ctrl, total_s=TOTAL_S)
-    new = api.run(api.Scenario(profile=CHAMELEON, datasets=FAST,
-                               controller="ismail-max-tput", cpu=CPU,
-                               total_s=TOTAL_S))
-    _assert_same_result(legacy, new)
+    with pytest.raises(AttributeError, match=r"repro\.api\.run"):
+        repro.core.simulate
+    with pytest.raises(AttributeError, match=r"repro\.api\.run"):
+        repro.core.engine.simulate
+    with pytest.raises(ImportError):
+        from repro.core import simulate  # noqa: F401
 
 
 def test_vmap_parameter_sweep():

@@ -18,12 +18,16 @@ appears in both records, the gate additionally checks *completion parity*:
 a cell that completed in the baseline must still complete in the current
 record — wall-clock tolerance must not mask a correctness regression.
 
-``--rebaseline`` closes the re-baseline loop: point it at a bench-smoke
-``BENCH_ci.json`` artifact and it rewrites
+``--rebaseline`` closes the re-baseline loop: point it at a CI
+``BENCH_ci.json`` artifact (bench-smoke uploads one per push; bench-full
+uploads one on dispatch and on the weekly cron) and it rewrites
 ``benchmarks/baselines/BENCH_baseline.json`` from the artifact's gated
 metrics (the ``*_per_sec`` steady-state ones — wall-clock metrics restate
 the same measurement and cold walls jitter past the tolerance, so they
-stay in the artifact ungated).  Commit the rewritten baseline.
+stay in the artifact ungated).  Gated metrics and reports the artifact
+does not cover are carried forward from the previous baseline, so a
+partial artifact arms its new gates without disarming existing ones.
+Commit the rewritten baseline.
 
 CI wall-clock is noisy across runner generations; 25% is deliberately a
 coarse tripwire for order-of-magnitude mistakes (an accidentally disabled
@@ -157,6 +161,21 @@ def rebaseline(artifact_path: str, out_path: str = BASELINE_PATH,
              if k.endswith(suffix)}
     if not gated:
         raise SystemExit(f"{artifact_path}: no *{suffix} metrics to gate on")
+    reports = dict(record.get("reports", {}))
+    # Carry forward what the artifact did not cover: a partial artifact
+    # (e.g. `--only dvfs --json` while bringing up a new grid) must arm its
+    # own gates without silently disarming everyone else's.  The artifact
+    # wins wherever it overlaps the committed baseline.
+    try:
+        with open(out_path) as f:
+            previous = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        previous = {}
+    for k, v in previous.get("metrics", {}).items():
+        if k.endswith(suffix):
+            gated.setdefault(k, v)
+    for k, v in previous.get("reports", {}).items():
+        reports.setdefault(k, v)
     meta = {k: v for k, v in record.get("meta", {}).items()
             if k in ("python", "machine", "smoke")}
     meta["note"] = (f"Gated metrics: steady-state *{suffix} only — wall "
@@ -165,12 +184,13 @@ def rebaseline(artifact_path: str, out_path: str = BASELINE_PATH,
                     f"BENCH_ci.json ungated. The reports section feeds the "
                     f"completion-parity check (cells that completed must "
                     f"keep completing). Rewritten by `benchmarks.compare "
-                    f"--rebaseline` from a bench-smoke BENCH_ci artifact; "
+                    f"--rebaseline` from a BENCH_ci artifact (bench-smoke "
+                    f"on every push, bench-full on dispatch/weekly cron); "
                     f"re-run that command on a fresh artifact whenever the "
                     f"runner class or an intentional perf change moves the "
-                    f"floor.")
-    out = {"metrics": gated, "reports": record.get("reports", {}),
-           "meta": meta}
+                    f"floor. Partial artifacts merge over the previous "
+                    f"baseline rather than replacing it.")
+    out = {"metrics": gated, "reports": reports, "meta": meta}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -1,0 +1,165 @@
+"""DVFS environment grid: tuners x frequency cap x core count under the
+first-principles CV²f energy model (repro.core.dvfs).
+
+The paper's tuners were measured against the affine per-core energy model;
+this grid re-runs them against the physical one — V(f) lookup tables,
+voltage-squared dynamic power, explicit leakage — and asks the questions
+that model exists to answer: does capping the frequency ladder save energy
+once V² bites, and what does halving the core count cost?  A 4-big +
+4-LITTLE part (``n_big=4``) makes the ``8c`` column heterogeneous while
+``4c`` is all-big.
+
+Rows: fig_dvfs/<tool>/<fcap>/<cores>, derived = "<gbps>Gbps;<J>J".
+
+``greendataflow()`` is the companion validation grid for the GreenDataFlow
+line of work (arXiv 1810.05892): testbed x technology (hp/lp) x idle
+accounting (race-to-idle vs pace-to-deadline) x tool, runnable as a named
+Experiment via ``python -m benchmarks.fig_dvfs --greendataflow``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro import api
+from repro.core import CpuProfile
+
+from .common import DATASETS, TESTBEDS, budget_for, emit
+
+CPU = CpuProfile()
+
+TOOLS = ("wget/curl", "ME", "EEMT")
+FCAPS = {"uncapped": None, "2.4ghz": 2.4, "1.8ghz": 1.8}
+CORES = {"8c": 8, "4c": 4}
+
+# --smoke: one tool pair, the extreme caps, one core count — exercises the
+# env-family grouping and the capped operating point without the full grid.
+SMOKE_TOOLS = ("wget/curl", "EEMT")
+SMOKE_FCAPS = ("uncapped", "1.8ghz")
+SMOKE_CORES = ("8c",)
+
+
+def _controller(cell):
+    tool = cell["tool"]
+    return api.make_controller(tool, max_ch=64) \
+        if tool in ("ME", "EEMT") else tool
+
+
+def _environment(cell):
+    return api.make_environment("dvfs", n_big=4,
+                                max_freq_ghz=cell["fcap"])
+
+
+def experiment(smoke: bool = False) -> api.Experiment:
+    tools = SMOKE_TOOLS if smoke else TOOLS
+    fcaps = SMOKE_FCAPS if smoke else tuple(FCAPS)
+    cores = SMOKE_CORES if smoke else tuple(CORES)
+    return api.Experiment(
+        name="fig_dvfs",
+        space=api.grid(
+            api.axis("tool", tools),
+            api.axis("fcap", {k: FCAPS[k] for k in fcaps}),
+            api.axis("cores", {k: CORES[k] for k in cores})),
+        base={
+            "profile": TESTBEDS["chameleon"],
+            "datasets": DATASETS["mixed"],
+            "cpu": lambda c: dataclasses.replace(CPU,
+                                                 num_cores=c["cores"]),
+            "controller": _controller,
+            "environment": _environment,
+            "total_s": 900.0 if smoke else budget_for(TESTBEDS["chameleon"]),
+        })
+
+
+def greendataflow() -> api.Experiment:
+    """GreenDataFlow validation grid: does race-to-idle beat
+    pace-to-deadline on both process technologies, across testbeds?"""
+    return api.Experiment(
+        name="greendataflow",
+        space=api.grid(
+            api.axis("testbed", {tb: TESTBEDS[tb]
+                                 for tb in ("chameleon", "cloudlab")},
+                     field="profile"),
+            api.axis("tech", ("hp", "lp")),
+            api.axis("idle", ("race", "pace")),
+            api.axis("tool", TOOLS)),
+        base={
+            "cpu": CPU,
+            "datasets": DATASETS["mixed"],
+            "controller": _controller,
+            "environment": lambda c: api.make_environment(
+                "dvfs", tech=c["tech"], idle=c["idle"]),
+            "total_s": lambda c: budget_for(c["profile"]),
+        })
+
+
+def run(smoke: bool = False, *, timing: str = "split",
+        cache: str | None = None) -> api.Report:
+    exp = experiment(smoke)
+    cells = exp.cells()
+    n_groups = api.group_count([c.scenario for c in cells])
+    report = exp.run(timing=timing, cache=cache, cells=cells)
+    secs = report.meta.get("us_per_cell", 0.0) / 1e6
+    for row in report.rows():
+        emit(f"fig_dvfs/{row['tool']}/{row['fcap']}/{row['cores']}", secs,
+             f"{row['avg_tput_gbps']:.3f}Gbps;{row['energy_j']:.0f}J;"
+             f"done={int(row['completed'])}")
+    emit("fig_dvfs/meta/executables", 0.0,
+         f"groups={n_groups};cells={len(report)}")
+    return report
+
+
+def headline(report: api.Report) -> dict:
+    """Per tool at 8 cores: the energy-optimal frequency cap, its savings
+    over the uncapped ladder, and what it costs in throughput."""
+    out = {}
+    for tool in dict.fromkeys(report["tool"]):
+        rows = {r["fcap"]: r
+                for r in report.select(tool=tool, cores="8c").rows()}
+        uncapped = rows["uncapped"]
+        best = min(rows, key=lambda k: rows[k]["energy_j"])
+        out[tool] = {
+            "best_fcap": best,
+            "energy_savings_pct":
+                100.0 * (1 - rows[best]["energy_j"]
+                         / uncapped["energy_j"]),
+            "tput_cost_pct":
+                100.0 * (1 - rows[best]["avg_tput_gbps"]
+                         / uncapped["avg_tput_gbps"]),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI: asserts every cell completes")
+    ap.add_argument("--greendataflow", action="store_true",
+                    help="run the GreenDataFlow validation grid instead")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="experiment cell cache directory")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the Report JSON")
+    args = ap.parse_args()
+    if args.greendataflow:
+        report = greendataflow().run(timing="split", cache=args.cache)
+        for row in report.rows():
+            emit(f"greendataflow/{row['testbed']}/{row['tech']}/"
+                 f"{row['idle']}/{row['tool']}", 0.0,
+                 f"{row['avg_tput_gbps']:.3f}Gbps;{row['energy_j']:.0f}J")
+    else:
+        report = run(smoke=args.smoke, cache=args.cache)
+    if args.report is not None:
+        report.to_json(args.report)
+        print(f"# wrote {args.report}")
+    if args.smoke:
+        incomplete = [f"{r['tool']}/{r['fcap']}/{r['cores']}"
+                      for r in report.rows() if not r["completed"]]
+        if incomplete:
+            # not assert: the CI gate must survive python -O
+            raise SystemExit(f"smoke cells did not complete: {incomplete}")
+        print(f"# smoke ok: {len(report)} cells completed")
+    elif not args.greendataflow:
+        print(json.dumps(headline(report), indent=2))

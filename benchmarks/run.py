@@ -1,8 +1,8 @@
 """Benchmark harness entry point: one module per paper figure/table.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fig2,fig3,fig4,micro,roofline,fleet,learn] [--smoke] \
-        [--json BENCH_perf.json]
+        [--only fig2,fig3,fig4,micro,roofline,fleet,learn,dvfs] \
+        [--smoke] [--json BENCH_perf.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark cell) and a
 summary of the paper's headline claims at the end.
@@ -29,7 +29,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    default="fig2,fig3,fig4,micro,roofline,fleet,learn")
+                    default="fig2,fig3,fig4,micro,roofline,fleet,learn,"
+                            "dvfs")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grids for fig2/fleet")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -103,6 +104,25 @@ def main() -> None:
         summary["fleet"] = {k: frec[k] for k in
                             ("transfers", "completed", "joules_per_gb",
                              "slowdown")}
+
+    if "dvfs" in only:
+        from . import fig_dvfs
+        prefix = "dvfs_smoke" if args.smoke else "dvfs"
+        t0 = time.perf_counter()
+        rd = fig_dvfs.run(smoke=args.smoke)
+        bench[f"{prefix}_wall_s"] = time.perf_counter() - t0
+        if "compile_s" in rd.meta:
+            bench[f"{prefix}_compile_s"] = rd.meta["compile_s"]
+        reports[prefix] = rd.to_dict()
+        if args.json is not None:
+            walls = [rd.meta["warm_wall_s"]]
+            for _ in range(2):
+                r = fig_dvfs.run(smoke=args.smoke, timing="cold")
+                walls.append(r.meta["wall_s"])
+            bench[f"{prefix}_warm_wall_s"] = min(walls)
+            bench[f"{prefix}_cells_per_sec"] = len(rd) / min(walls)
+        if not args.smoke:
+            summary["dvfs_headline"] = fig_dvfs.headline(rd)
 
     if "learn" in only:
         from . import learn as learn_bench

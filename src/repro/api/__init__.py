@@ -25,7 +25,8 @@ from .controllers import (Controller, ControllerInit,  # noqa: F401
                           IsmailTargetController, StaticBaselineController,
                           TunerController, as_controller, list_controllers,
                           make_controller, register_controller)
-from .environments import (BigLittleEnergyModel, EnergyModel,  # noqa: F401
+from .environments import (BigLittleEnergyModel, DvfsEnergyModel,  # noqa: F401
+                           DvfsNetworkModel, EnergyModel,
                            Environment, LossyWanNetworkModel, NetworkModel,
                            ReferenceEnergyModel, ReferenceNetworkModel,
                            as_environment, list_energy_models,
@@ -57,6 +58,7 @@ def __getattr__(name):
 
 __all__ = [
     "Axis", "BigLittleEnergyModel", "Cell", "Controller", "ControllerInit",
+    "DvfsEnergyModel", "DvfsNetworkModel",
     "EnergyModel", "Environment", "Experiment", "FleetReport", "Host",
     "IsmailTargetController", "LossyWanNetworkModel", "NetworkModel",
     "ReferenceEnergyModel", "ReferenceNetworkModel", "Report", "Scenario",

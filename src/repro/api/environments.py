@@ -41,7 +41,14 @@ Built-in variants:
     knee, and a stochastic-free sinusoidal RTT jitter schedule;
   * ``big-little`` — an asymmetric (big.LITTLE-style) host CPU: cores
     beyond the big-cluster size are efficiency cores with a fraction of
-    the throughput and dynamic power of a big core.
+    the throughput and dynamic power of a big core;
+  * ``dvfs`` — first-principles DVFS host physics (``repro.core.dvfs``):
+    per-technology V(f) curves, CV²f dynamic power with an explicit
+    leakage split, big/LITTLE capacitance and leakage constants, and
+    race-to-idle vs pace-to-deadline idle accounting.  Degenerates to the
+    reference bit-exactly with matched flat tables
+    (``DvfsEnergyModel.matched``), and its network half carries a native
+    ``step_arrays`` lowering for the flat executors.
 """
 from __future__ import annotations
 
@@ -52,6 +59,8 @@ from typing import Any, Callable, Protocol, runtime_checkable
 import jax.numpy as jnp
 
 from repro.core import energy_model, network_model
+from repro.core.dvfs import (DVFS_TECHS, DvfsEnergyModel,  # noqa: F401
+                             DvfsNetworkModel)
 from repro.core.types import CpuProfile, SimState
 
 from ._registry import make_from, register_in
@@ -426,6 +435,18 @@ register_environment(
 register_environment(
     "big-little",
     lambda **kw: Environment(energy=BigLittleEnergyModel(**kw)))
+# The dvfs environment pairs the first-principles energy model with the
+# reference WAN physics carried by DvfsNetworkModel (whose native
+# step_arrays keeps the flat executors off the pack/unpack adapter).
+# Kwargs parameterize the energy half: tech= selects a DVFS_TECHS preset,
+# everything else overrides DvfsEnergyModel fields.
+register_network_model(
+    "dvfs", _no_kwargs("network model 'dvfs'", DvfsNetworkModel))
+register_energy_model("dvfs", DvfsEnergyModel.for_tech)
+register_environment(
+    "dvfs",
+    lambda **kw: Environment(network=DvfsNetworkModel(),
+                             energy=DvfsEnergyModel.for_tech(**kw)))
 
 
 def as_environment(obj=None) -> Environment:

@@ -31,10 +31,32 @@ the pytree ``step`` when a model does not provide a native one.
 """
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
 import numpy as np
 
 from .types import NetParams, SimState, SLAParams, TunerState
+
+
+@functools.lru_cache(maxsize=None)
+def const_table(values: tuple) -> np.ndarray:
+    """Materialize a static lookup table (one read-only float32 host array
+    per distinct value tuple).
+
+    Tables built here are *trace-time constants*, not scan carries and not
+    parameter-row slots: the flat executors close over them, and the pallas
+    executor's ``make_jaxpr`` const-hoisting lifts them into the fused
+    kernel as extra inputs automatically — a model gains a lookup table
+    (e.g. the DVFS V(f) curves) without widening ``TickLayout``'s parameter
+    row or touching the kernel plumbing.  The cached array is host-side
+    numpy on purpose: a device (or traced) constant captured under one jit
+    trace must never be replayed into another, so each trace re-stages the
+    same bytes as its own constant.
+    """
+    table = np.asarray(values, np.float32)
+    table.setflags(write=False)
+    return table
 
 # Scalar slots appended after the two [P] blocks of the f32 state row.
 _SIM_SCALARS = ("t", "energy_j", "bytes_moved")

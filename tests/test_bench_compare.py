@@ -105,6 +105,47 @@ def test_rebaseline_picks_up_new_gated_metrics(tmp_path):
     assert failures == []
 
 
+def test_rebaseline_carries_forward_uncovered_gates(tmp_path):
+    """A partial artifact (one suite's metrics/reports) must merge over the
+    committed baseline: new gates arm, existing gates stay armed, and
+    overlapping entries take the artifact's values."""
+    out = tmp_path / "baseline.json"
+    out.write_text(json.dumps({
+        "metrics": {"fleet_smoke_transfers_per_sec": 10.0,
+                    "dvfs_smoke_cells_per_sec": 2.0,
+                    "old_wall_s": 9.0},
+        "reports": {"fig2_smoke": _report_dict([1, 1]),
+                    "dvfs_smoke": _report_dict([1])},
+        "meta": {"note": "previous"},
+    }))
+    artifact = tmp_path / "BENCH_ci.json"
+    artifact.write_text(json.dumps({
+        "metrics": {"dvfs_smoke_cells_per_sec": 4.0,
+                    "dvfs_smoke_wall_s": 1.0},
+        "reports": {"dvfs_smoke": _report_dict([1, 1, 1])},
+        "meta": {"python": "3", "machine": "x", "smoke": True},
+    }))
+    written = bc.rebaseline(str(artifact), str(out))
+    # artifact wins on overlap; uncovered baseline gates survive
+    assert written["metrics"] == {"dvfs_smoke_cells_per_sec": 4.0,
+                                  "fleet_smoke_transfers_per_sec": 10.0}
+    assert set(written["reports"]) == {"fig2_smoke", "dvfs_smoke"}
+    assert len(api.Report.from_dict(written["reports"]["dvfs_smoke"])) == 3
+    # ungated wall metrics never sneak into the baseline via carry-forward
+    assert "old_wall_s" not in written["metrics"]
+
+
+def test_rebaseline_from_scratch_needs_no_previous_baseline(tmp_path):
+    artifact = tmp_path / "BENCH_ci.json"
+    artifact.write_text(json.dumps({
+        "metrics": {"a_per_sec": 1.0},
+        "reports": {},
+        "meta": {},
+    }))
+    written = bc.rebaseline(str(artifact), str(tmp_path / "fresh.json"))
+    assert written["metrics"] == {"a_per_sec": 1.0}
+
+
 def test_rebaseline_without_gated_metrics_refuses(tmp_path):
     artifact = tmp_path / "BENCH_ci.json"
     artifact.write_text(json.dumps({"metrics": {"only_wall_s": 1.0}}))

@@ -1,0 +1,339 @@
+"""The first-principles DVFS environment family (repro.core.dvfs).
+
+Four contracts, in order of importance:
+
+* **Degeneration** — with matched flat tables (V(f) = f, capacitance =
+  ``core_dyn_w_per_ghz3``, V-independent leakage = ``core_static_w``, all
+  big cores, pace accounting) the model reproduces the reference physics
+  *bit-exactly*, across run / sweep / fleet cells (the RUN_GOLDEN subset
+  duplicated below) and across all three executors.
+* **Executor parity** — a non-degenerate dvfs environment runs
+  bit-identically on ``reference`` / ``blocked`` / ``pallas``, and the
+  flat executors consume the *native* ``step_arrays`` lowering (the pytree
+  ``step`` is never called there).
+* **Physics invariants** — power is strictly increasing in frequency,
+  race-to-idle never loses to pace-to-deadline, energy-per-byte has an
+  interior minimum exactly when leakage/static power is present.
+  (Randomized hypothesis widenings live in tests/test_dvfs_properties.py,
+  importorskip-guarded like the other property modules.)
+* **Registry surface** — ``make_environment("dvfs", ...)``, tech presets,
+  and hyper-parameter validation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import api, fleet
+from repro.core import dvfs, tickstate
+from repro.core.types import CHAMELEON, CLOUDLAB, CpuProfile, DatasetSpec
+
+CPU = CpuProfile()
+MATCHED = api.DvfsEnergyModel.matched(CPU)
+MATCHED_ENV = api.Environment(network=api.DvfsNetworkModel(), energy=MATCHED)
+
+FAST = (DatasetSpec("a", 200, 400.0, 2.0),
+        DatasetSpec("b", 10, 600.0, 60.0))
+ONE = (DatasetSpec("c", 50, 500.0, 10.0),)
+
+NO_CONTENTION = 1e9
+
+# Duplicated verbatim from tests/test_environments.py RUN_GOLDEN (PR 5):
+# (completed, time_s, energy_j, avg_tput_MBps, avg_power_w).  The matched
+# dvfs environment must keep reproducing these bit-for-bit.
+GOLDEN_SUBSET = {
+    ("chameleon", "eemt", "fast"): (True, 1.2000000000000002, 31.04885482788086, 833.3333333333333, 25.87404568990071),
+    ("chameleon", "me", "fast"): (True, 4.0, 47.53553771972656, 249.9999542236328, 11.88388442993164),
+    ("chameleon", "wget/curl", "one"): (True, 8.3, 140.1924591064453, 60.24096385542168, 16.89065772366811),
+    ("cloudlab", "eett", "one"): (True, 4.2, 57.62987518310547, 119.04764084588913, 13.721398853120348),
+}
+FLEET_GOLDEN = (True, 1.2000000000000002, 31.04885482788086, 1000.0)
+_PROFILES = {"chameleon": CHAMELEON, "cloudlab": CLOUDLAB}
+_DATASETS = {"fast": FAST, "one": ONE}
+
+
+def _mk(name):
+    if name == "eett":
+        return api.make_controller(name, target_tput_mbps=400.0)
+    return api.make_controller(name)
+
+
+def _scn(profile, name, ds, **kw):
+    kw.setdefault("total_s", 240.0)
+    kw.setdefault("dt", 0.1)
+    return api.Scenario(profile=profile, datasets=ds, controller=_mk(name),
+                        **kw)
+
+
+def _scalars(r):
+    return (r.completed, r.time_s, r.energy_j, r.avg_tput_MBps,
+            r.avg_power_w)
+
+
+# --------------------------------------------------------------- registry --
+
+def test_dvfs_is_registered_everywhere():
+    assert "dvfs" in api.list_environments()
+    assert "dvfs" in api.list_energy_models()
+    assert "dvfs" in api.list_network_models()
+    env = api.make_environment("dvfs")
+    assert env.name == "dvfs"
+    assert isinstance(env.energy, api.DvfsEnergyModel)
+    assert isinstance(env.network, api.DvfsNetworkModel)
+    assert isinstance(env.energy, api.EnergyModel)
+    assert isinstance(env.network, api.NetworkModel)
+    assert hash(env.code()) == hash(env.code())
+
+
+def test_dvfs_tech_presets_and_kwargs():
+    lp = api.make_environment("dvfs", tech="lp", idle="race")
+    assert lp.energy.tech == "lp"
+    assert lp.energy.idle == "race"
+    assert lp.energy.vf_volt == dvfs.DVFS_TECHS["lp"]["vf_volt"]
+    capped = api.make_energy_model("dvfs", max_freq_ghz=1.8)
+    assert capped.max_freq_ghz == 1.8
+    with pytest.raises(KeyError, match="unknown DVFS technology"):
+        api.make_environment("dvfs", tech="sci-fi")
+    with pytest.raises(TypeError):
+        api.make_network_model("dvfs", tech="hp")  # knobs live on energy
+
+
+def test_dvfs_hyperparameters_are_validated():
+    mk = api.DvfsEnergyModel.for_tech
+    with pytest.raises(ValueError, match="strictly increasing"):
+        api.DvfsEnergyModel(vf_ghz=(2.0, 1.0), vf_volt=(0.8, 0.9))
+    with pytest.raises(ValueError, match=">= 2 matched"):
+        api.DvfsEnergyModel(vf_ghz=(1.0,), vf_volt=(0.8,))
+    with pytest.raises(ValueError, match="vf_volt"):
+        api.DvfsEnergyModel(vf_ghz=(1.0, 2.0), vf_volt=(0.8, -0.9))
+    with pytest.raises(ValueError, match="cap_nf"):
+        mk(cap_nf=0.0)
+    with pytest.raises(ValueError, match="leakage"):
+        mk(leak_w=-0.1)
+    with pytest.raises(ValueError, match="n_big"):
+        mk(n_big=0)
+    with pytest.raises(ValueError, match="little_perf"):
+        mk(little_perf=0.0)
+    with pytest.raises(ValueError, match="idle must be"):
+        mk(idle="sprint")
+    with pytest.raises(ValueError, match="idle_leak_frac"):
+        mk(idle_leak_frac=1.5)
+    with pytest.raises(ValueError, match="max_freq_ghz"):
+        mk(max_freq_ghz=0.0)
+
+
+def test_const_table_is_cached_and_immutable():
+    a = tickstate.const_table((1.0, 2.0, 3.0))
+    b = tickstate.const_table((1.0, 2.0, 3.0))
+    assert a is b
+    assert a.dtype == np.float32
+    with pytest.raises(ValueError):
+        a[0] = 9.0
+
+
+# ---------------------------------------------- matched-tables degeneration --
+
+def test_matched_tables_reproduce_run_goldens_bit_exactly():
+    for (pn, cn, dn), want in sorted(GOLDEN_SUBSET.items()):
+        r = api.run(_scn(_PROFILES[pn], cn, _DATASETS[dn],
+                         environment=MATCHED_ENV))
+        assert _scalars(r) == want, (pn, cn, dn)
+
+
+def test_matched_tables_match_reference_in_sweep():
+    cases = sorted(GOLDEN_SUBSET)
+    scs = [_scn(_PROFILES[pn], cn, _DATASETS[dn], environment=e)
+           for e in (None, MATCHED_ENV) for pn, cn, dn in cases]
+    swept = api.sweep(scs)
+    ref, got = swept[:len(cases)], swept[len(cases):]
+    for case, a, b in zip(cases, ref, got):
+        assert _scalars(a) == _scalars(b), case
+
+
+def test_matched_tables_match_fleet_golden():
+    req = fleet.TransferRequest(arrival_s=0.0, datasets=FAST,
+                                controller=_mk("eemt"), profile=CHAMELEON,
+                                name="g", total_s=240.0)
+    hosts = (fleet.Host("h", nic_mbps=NO_CONTENTION,
+                        environment=MATCHED_ENV),)
+    rep = fleet.run_fleet([req], hosts, wave_s=5.0, dt=0.1)
+    t = rep.transfers[0]
+    assert (t.completed, t.time_s, t.energy_j, t.moved_mb) == FLEET_GOLDEN
+
+
+@pytest.mark.parametrize("executor", ["reference", "blocked", "pallas"])
+def test_matched_tables_degenerate_on_every_executor(executor):
+    ref = api.run(_scn(CHAMELEON, "eemt", FAST, executor=executor))
+    got = api.run(_scn(CHAMELEON, "eemt", FAST, environment=MATCHED_ENV,
+                       executor=executor))
+    assert _scalars(got) == _scalars(ref)
+
+
+# ----------------------------------------------------------- executor parity --
+
+@pytest.mark.parametrize("env_kwargs", [
+    dict(tech="hp", idle="race", n_big=4),
+    dict(tech="lp", max_freq_ghz=1.8),
+])
+def test_dvfs_runs_bit_identically_across_executors(env_kwargs):
+    env = api.make_environment("dvfs", **env_kwargs)
+    results = {}
+    for ex in ("reference", "blocked", "pallas"):
+        r = api.run(_scn(CHAMELEON, "eemt", FAST, environment=env,
+                         executor=ex))
+        assert r.completed, ex
+        results[ex] = _scalars(r) + (r.metrics.power_w.tobytes(),
+                                     r.metrics.tput_mbps.tobytes())
+    assert results["blocked"] == results["reference"]
+    assert results["pallas"] == results["reference"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _NativeOnlyNetwork(api.DvfsNetworkModel):
+    """Spy: the pytree step must never run on the flat executors."""
+
+    def step(self, *a, **k):
+        raise AssertionError("flat executors must use the native "
+                             "step_arrays lowering, not the pytree step")
+
+
+@pytest.mark.parametrize("executor", ["blocked", "pallas"])
+def test_flat_executors_use_native_lowering(executor):
+    env = api.Environment(network=_NativeOnlyNetwork(), energy=MATCHED)
+    r = api.run(_scn(CHAMELEON, "eemt", FAST, environment=env,
+                     executor=executor))
+    ref = api.run(_scn(CHAMELEON, "eemt", FAST))
+    assert _scalars(r) == _scalars(ref)
+
+
+def test_lower_network_step_prefers_native():
+    lay = tickstate.TickLayout(2)
+
+    def closure(fn):
+        return [c.cell_contents for c in fn.__closure__]
+
+    # the native closure routes through the model's own method ...
+    native = tickstate.lower_network_step(api.DvfsNetworkModel(), lay)
+    assert any(getattr(x, "__func__", None) is
+               api.DvfsNetworkModel.step_arrays for x in closure(native))
+    # ... while a model without one gets the derived pack/step/unpack form
+    derived = tickstate.lower_network_step(api.ReferenceNetworkModel(), lay)
+    assert any(isinstance(x, api.ReferenceNetworkModel)
+               for x in closure(derived))
+
+
+# ------------------------------------------------- deterministic physics --
+# (the hypothesis-widened versions live in tests/test_dvfs_properties.py,
+# which module-skips where hypothesis is unavailable; these must run
+# everywhere)
+
+LADDER = CPU.freq_levels_ghz
+HP = api.DvfsEnergyModel.for_tech("hp")
+
+
+def test_power_strictly_increases_in_frequency_on_the_ladder():
+    for tech in ("hp", "lp"):
+        model = api.DvfsEnergyModel.for_tech(tech)
+        for cores in (1, 4, 8):
+            c = jnp.asarray(cores, jnp.int32)
+            watts = [float(model.power_w(CPU, c, jnp.float32(f), 0.7, 100.0))
+                     for f in LADDER]
+            assert all(b > a for a, b in zip(watts, watts[1:])), (tech, cores)
+
+
+def test_matched_tables_bitwise_on_the_whole_lattice():
+    """The degeneration holds pointwise, not just end-to-end: every lattice
+    point produces the reference watts and MB/s bit-for-bit."""
+    ref = api.ReferenceEnergyModel()
+    for cores in range(1, CPU.num_cores + 1):
+        for fi in range(len(LADDER)):
+            ci = jnp.asarray(cores, jnp.int32)
+            fj = jnp.asarray(fi, jnp.int32)
+            c_m, f_m = MATCHED.operating_point(CPU, ci, fj)
+            c_r, f_r = ref.operating_point(CPU, ci, fj)
+            assert float(f_m) == float(f_r) and int(c_m) == int(c_r)
+            for util in (0.0, 0.37, 1.0):
+                for tput in (0.0, 123.4, 1700.0):
+                    assert float(MATCHED.power_w(CPU, c_m, f_m, util,
+                                                 tput)) == \
+                        float(ref.power_w(CPU, c_r, f_r, util, tput))
+            assert float(MATCHED.cpu_capacity_mbps(CPU, c_m, f_m, 8.0)) == \
+                float(ref.cpu_capacity_mbps(CPU, c_r, f_r, 8.0))
+            assert float(MATCHED.cpu_load(CPU, 500.0, c_m, f_m, 8.0)) == \
+                float(ref.cpu_load(CPU, 500.0, c_r, f_r, 8.0))
+
+
+def _energy_per_mb_sweep(model, cpu, cores=1):
+    """J/MB across a dense CPU-bound frequency sweep inside the ladder."""
+    c = jnp.asarray(cores, jnp.int32)
+    out = []
+    for f in np.linspace(LADDER[0], LADDER[-1], 25):
+        cap = model.cpu_capacity_mbps(cpu, c, jnp.float32(f), 8.0)
+        out.append(float(model.energy_per_mb(cpu, c, jnp.float32(f), cap,
+                                             8.0)))
+    return out
+
+
+def test_energy_per_byte_has_interior_minimum_with_leakage():
+    """Nonzero leakage/static power makes racing *and* crawling both lose:
+    the V(f) sweep has an energy-optimal frequency strictly inside the
+    ladder.  With leakage and uncore power removed, the CV²f term is all
+    that is left and the minimum collapses onto the lowest frequency."""
+    e = _energy_per_mb_sweep(HP, CPU)
+    k = int(np.argmin(e))
+    assert 0 < k < len(e) - 1
+    # convex-ish: no second dip — decreasing then increasing around the min
+    assert all(b <= a for a, b in zip(e[:k], e[1:k + 1]))
+    assert all(b >= a for a, b in zip(e[k:], e[k + 1:]))
+
+    clean_cpu = dataclasses.replace(CPU, pkg_static_w=0.0,
+                                    mem_w_per_mbps=0.0)
+    clean = api.DvfsEnergyModel.for_tech("hp", leak_w=0.0, leak_w_per_v=0.0)
+    e0 = _energy_per_mb_sweep(clean, clean_cpu)
+    assert int(np.argmin(e0)) == 0
+    assert all(b >= a for a, b in zip(e0, e0[1:]))
+
+
+def test_race_to_idle_wins_exactly_when_leakage_dominates():
+    """Transfer-level crossover: with zero leakage the two accounting modes
+    are the same physics (bit-identical energy); as leakage grows, the
+    race-to-idle advantage grows monotonically."""
+    def energy(leak, idle):
+        model = api.DvfsEnergyModel.for_tech("hp", leak_w=leak,
+                                             leak_w_per_v=0.0, idle=idle)
+        env = api.Environment(network=api.DvfsNetworkModel(), energy=model)
+        r = api.run(_scn(CHAMELEON, "wget/curl", FAST, environment=env))
+        assert r.completed
+        return r.energy_j
+
+    leaks = (0.0, 0.25, 1.0, 3.0)
+    deltas = [energy(lk, "pace") - energy(lk, "race") for lk in leaks]
+    assert deltas[0] == 0.0
+    assert all(d > 0.0 for d in deltas[1:])
+    assert deltas == sorted(deltas)
+
+
+def test_voltage_interpolation_is_exact_at_nodes_and_clamped():
+    for f, v in zip(HP.vf_ghz, HP.vf_volt):
+        assert float(HP.voltage(jnp.float32(f))) == np.float32(v)
+    # midpoint interpolates strictly between nodes; edges clamp
+    mid = float(HP.voltage(jnp.float32((HP.vf_ghz[0] + HP.vf_ghz[1]) / 2)))
+    assert HP.vf_volt[0] < mid < HP.vf_volt[1]
+    assert float(HP.voltage(jnp.float32(0.01))) == np.float32(HP.vf_volt[0])
+    assert float(HP.voltage(jnp.float32(99.0))) == np.float32(HP.vf_volt[-1])
+
+
+def test_frequency_cap_binds_the_operating_point():
+    capped = api.DvfsEnergyModel.for_tech("hp", max_freq_ghz=1.8)
+    c, f = capped.operating_point(CPU, jnp.asarray(8, jnp.int32),
+                                  jnp.asarray(len(LADDER) - 1, jnp.int32))
+    assert float(f) == np.float32(1.8)
+    r_cap = api.run(_scn(CHAMELEON, "eemt", FAST, environment=api.Environment(
+        network=api.DvfsNetworkModel(), energy=capped)))
+    r_ref = api.run(_scn(CHAMELEON, "eemt", FAST, environment=api.Environment(
+        network=api.DvfsNetworkModel(),
+        energy=api.DvfsEnergyModel.for_tech("hp"))))
+    assert r_cap.completed and r_ref.completed
+    assert r_cap.time_s >= r_ref.time_s

@@ -1,0 +1,77 @@
+"""Property-based widenings of the DVFS physics invariants.
+
+The deterministic anchors live in tests/test_dvfs.py and always run; this
+module re-checks the same invariants over randomized lattice points and
+hyper-parameters.  Like the other ``*_properties`` suites it module-skips
+where hypothesis is not installed.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro import api  # noqa: E402
+from repro.core.types import CpuProfile  # noqa: E402
+
+CPU = CpuProfile()
+LADDER = CPU.freq_levels_ghz
+MATCHED = api.DvfsEnergyModel.matched(CPU)
+
+
+@settings(deadline=None, max_examples=40)
+@given(cores=st.integers(1, 8),
+       lo=st.integers(0, len(LADDER) - 2),
+       hi_off=st.integers(1, len(LADDER) - 1),
+       util=st.floats(0.05, 1.0),
+       tech=st.sampled_from(("hp", "lp")))
+def test_power_strictly_increases_in_frequency(cores, lo, hi_off, util,
+                                               tech):
+    hi = min(lo + hi_off, len(LADDER) - 1)
+    model = api.DvfsEnergyModel.for_tech(tech)
+    c = jnp.asarray(cores, jnp.int32)
+    p_lo = float(model.power_w(CPU, c, jnp.float32(LADDER[lo]), util, 100.0))
+    p_hi = float(model.power_w(CPU, c, jnp.float32(LADDER[hi]), util, 100.0))
+    assert p_hi > p_lo
+
+
+@settings(deadline=None, max_examples=40)
+@given(cores=st.integers(1, 8),
+       fi=st.integers(0, len(LADDER) - 1),
+       util=st.floats(0.0, 1.0),
+       leak=st.floats(0.0, 3.0),
+       tput=st.floats(0.0, 2000.0))
+def test_race_to_idle_never_draws_more_than_pace(cores, fi, util, leak,
+                                                 tput):
+    race = api.DvfsEnergyModel.for_tech("hp", leak_w=leak, idle="race")
+    pace = api.DvfsEnergyModel.for_tech("hp", leak_w=leak, idle="pace")
+    c = jnp.asarray(cores, jnp.int32)
+    f = jnp.float32(LADDER[fi])
+    p_race = float(race.power_w(CPU, c, f, util, tput))
+    p_pace = float(pace.power_w(CPU, c, f, util, tput))
+    assert p_race <= p_pace
+    if util >= 1.0:
+        assert p_race == p_pace   # no idle time -> nothing to park
+
+
+@settings(deadline=None, max_examples=40)
+@given(cores=st.integers(1, 8),
+       fi=st.integers(0, len(LADDER) - 1),
+       util=st.floats(0.0, 1.0),
+       tput=st.floats(0.0, 2000.0))
+def test_matched_tables_power_and_capacity_bitwise(cores, fi, util, tput):
+    """The degeneration holds pointwise, not just end-to-end: every lattice
+    point produces the reference watts and MB/s bit-for-bit."""
+    ref = api.ReferenceEnergyModel()
+    ci = jnp.asarray(cores, jnp.int32)
+    fj = jnp.asarray(fi, jnp.int32)
+    c_m, f_m = MATCHED.operating_point(CPU, ci, fj)
+    c_r, f_r = ref.operating_point(CPU, ci, fj)
+    assert float(f_m) == float(f_r) and int(c_m) == int(c_r)
+    assert float(MATCHED.power_w(CPU, c_m, f_m, util, tput)) == \
+        float(ref.power_w(CPU, c_r, f_r, util, tput))
+    assert float(MATCHED.cpu_capacity_mbps(CPU, c_m, f_m, 8.0)) == \
+        float(ref.cpu_capacity_mbps(CPU, c_r, f_r, 8.0))
+    assert float(MATCHED.cpu_load(CPU, tput, c_m, f_m, 8.0)) == \
+        float(ref.cpu_load(CPU, tput, c_r, f_r, 8.0))

@@ -1,6 +1,7 @@
 """Fleet-scale benchmark: a >=10k-transfer, >=8-host trace on CPU.
 
     PYTHONPATH=src python -m benchmarks.fleet [--smoke] [--json PATH]
+    PYTHONPATH=src python -m benchmarks.fleet --online [--smoke] [--json P]
 
 Runs a Poisson arrival trace of mixed workloads and controllers through
 ``repro.fleet.run_fleet`` and reports, per controller, joules/GB and the
@@ -13,10 +14,21 @@ The default trace is 10,000 transfers over 8 hosts at ~80% offered NIC
 load; ``--smoke`` shrinks it to a CI-sized 400 transfers over 4 hosts
 exercising the identical code path (admission, contention rescale, wave
 grouping, bucket padding).
+
+``--online`` benchmarks the bounded-memory streaming loop instead
+(``repro.fleet.run_fleet_online``): a diurnal arrival stream of
+HTTP-services-style workloads (many small transfers) consumed through the
+slot-pool wave loop.  Smoke is a 10k-transfer slice (the
+``fleet_online_transfers_per_sec`` perf-gate metric); the full run does a
+100k leg and a 1M leg back to back and records peak host RSS after each —
+the bounded-memory claim, as a BENCH record: ``rss_growth`` is the
+1M-over-100k peak-RSS ratio and should stay ~1.0 (slot pools, not stream
+length, own the memory).
 """
 from __future__ import annotations
 
 import json
+import resource
 import time
 
 from repro import fleet
@@ -68,28 +80,28 @@ def build(smoke: bool = False):
 def controller_report(report) -> "api.Report":
     """Tabulate ``FleetReport.by_controller`` as a columnar ``api.Report``
     (the same schema the figure grids emit, so ``benchmarks.compare`` and
-    downstream tooling read one format)."""
+    downstream tooling read one format).  Accepts the offline
+    ``FleetReport`` and the online ``OnlineFleetReport`` alike — both
+    expose ``by_controller()`` rows of the same shape."""
     from repro import api
 
-    rows = report.by_controller()
-    nan = float("nan")
-    cols: dict[str, list] = {
-        "controller": [], "transfers": [], "completed": [], "energy_j": [],
-        "gb": [], "joules_per_gb": [], "mean_time_s": [], "mean_wait_s": [],
-        "p50_slowdown": [], "p95_slowdown": [], "p99_slowdown": [],
-    }
-    for name, row in rows.items():
-        cols["controller"].append(name)
-        for k in ("transfers", "completed", "energy_j", "gb",
-                  "joules_per_gb", "mean_time_s", "mean_wait_s"):
-            cols[k].append(float(row[k]))
-        for p in ("p50", "p95", "p99"):
-            v = row["slowdown"][p]
-            cols[f"{p}_slowdown"].append(nan if v is None else float(v))
-    return api.Report(cols, axes=("controller",), derive=False,
-                      meta={"experiment": "fleet",
-                            "transfers": len(report.transfers),
-                            "sim_s": report.sim_s})
+    n_transfers = (report.fold.transfers if hasattr(report, "fold")
+                   else len(report.transfers))
+
+    def rows():
+        for name, row in report.by_controller().items():
+            flat = {"controller": name}
+            for k in ("transfers", "completed", "energy_j", "gb",
+                      "joules_per_gb", "mean_time_s", "mean_wait_s"):
+                flat[k] = float(row[k])
+            for p in ("p50", "p95", "p99"):
+                flat[f"{p}_slowdown"] = row["slowdown"][p]
+            yield flat
+
+    return api.Report.from_rows(rows(), axes=("controller",), derive=False,
+                                meta={"experiment": "fleet",
+                                      "transfers": n_transfers,
+                                      "sim_s": report.sim_s})
 
 
 def run(smoke: bool = False, json_path: str | None = None,
@@ -144,16 +156,133 @@ def run(smoke: bool = False, json_path: str | None = None,
     return summary
 
 
+# ===================================================================== #
+# Online (streaming) mode — the bounded-memory loop under load.         #
+# ===================================================================== #
+
+# HTTP-services-style menu (arXiv 1707.05730): many small transfers with a
+# medium/large tail, so slot recycling (not lane count) carries the run.
+ONLINE_DATASETS = (
+    (DatasetSpec("svc-s", 64, 0.25 * GB, 0.1),),
+    (DatasetSpec("svc-m", 256, 1.0 * GB, 0.5),),
+    (DatasetSpec("svc-l", 16, 4.0 * GB, 64.0),),
+)
+ONLINE_CONTROLLERS = ("eemt", "me", "wget/curl")
+
+
+def _rss_mb() -> float:
+    # ru_maxrss is KB on Linux (bytes on macOS; this benchmark gates on
+    # the Linux CI runner and the ratio is unit-invariant anyway).
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def build_online_stream(n_transfers: int, seed: int = 1810):
+    """A diurnal arrival stream: raised-cosine day/night rate over a
+    compressed 1-hour 'day', ~4-40 arrivals/s."""
+    return fleet.diurnal_stream(
+        base_rate_per_s=4.0, peak_rate_per_s=40.0, period_s=3600.0,
+        datasets=ONLINE_DATASETS, controllers=ONLINE_CONTROLLERS,
+        profile=CHAMELEON, seed=seed, n_transfers=n_transfers,
+        total_s=900.0)
+
+
+def _run_online_leg(n_transfers: int, n_hosts: int) -> tuple:
+    # Fat service NICs: 10x the per-flow path cap, so each host carries
+    # ~10 concurrent full-speed flows (the offered diurnal peak saturates
+    # the pool without collapsing per-flow shares).
+    hosts = fleet.host_pool(n_hosts,
+                            nic_mbps=10.0 * CHAMELEON.bandwidth_mbps,
+                            slots=0)
+    t0 = time.perf_counter()
+    report = fleet.run_fleet_online(
+        build_online_stream(n_transfers), hosts,
+        wave_s=20.0, dt=1.0, pool_capacity=256)
+    return report, time.perf_counter() - t0
+
+
+def run_online(smoke: bool = False, json_path: str | None = None,
+               warm: bool = False) -> dict:
+    """Stream-loop benchmark.  Smoke: one timed 10k-transfer leg (the
+    ``fleet_online_transfers_per_sec`` gate metric).  Full: a 100k leg
+    then a 1M leg with peak-RSS snapshots after each — flat RSS across the
+    10x scale-up is the bounded-memory acceptance record."""
+    n_hosts = 4 if smoke else 8
+    if warm:
+        # Compile every pool's wave runner off the clock (perf gate
+        # compares steady-state simulation, not XLA compile).
+        _run_online_leg(1_000, n_hosts)
+
+    n_main = 10_000 if smoke else 100_000
+    report, wall_s = _run_online_leg(n_main, n_hosts)
+    tps = report.fold.transfers / wall_s
+    rss_main = _rss_mb()
+
+    record = {
+        "wall_s": wall_s,
+        "transfers_per_sec": tps,
+        "peak_rss_mb": rss_main,
+        "smoke": smoke,
+    }
+    if not smoke:
+        big_report, big_wall = _run_online_leg(1_000_000, n_hosts)
+        rss_big = _rss_mb()
+        record.update({
+            "transfers_1m": big_report.fold.transfers,
+            "completed_1m": big_report.completed,
+            "wall_1m_s": big_wall,
+            "transfers_per_sec_1m": big_report.fold.transfers / big_wall,
+            "peak_rss_1m_mb": rss_big,
+            # ru_maxrss is monotone, so growth >= 1.0 by construction;
+            # ~1.0 is the bounded-memory claim at 10x the stream length.
+            "rss_growth": rss_big / max(rss_main, 1e-9),
+        })
+
+    ctrl_report = controller_report(report)
+    per_xfer_s = wall_s / max(report.fold.transfers, 1)
+    for row in ctrl_report.rows():
+        p99 = row["p99_slowdown"]
+        emit(f"fleet_online/{row['controller']}", per_xfer_s,
+             f"{row['joules_per_gb']:.1f}J/GB;"
+             f"p99={'na' if p99 != p99 else format(p99, '.2f')};"
+             f"n={row['transfers']:.0f}")
+    c = report.counters
+    emit("fleet_online/meta", per_xfer_s,
+         f"transfers={report.fold.transfers};hosts={n_hosts};"
+         f"completed={report.completed};sim_s={report.sim_s:.0f};"
+         f"tps={tps:.1f};rss={rss_main:.0f}MB;"
+         f"recycled={c['recycled_slots']};peak_inflight="
+         f"{c['peak_in_flight']}")
+    if not smoke:
+        emit("fleet_online/1m", record["wall_1m_s"] / 1_000_000,
+             f"tps={record['transfers_per_sec_1m']:.1f};"
+             f"rss={record['peak_rss_1m_mb']:.0f}MB;"
+             f"growth={record['rss_growth']:.3f}")
+
+    if json_path is not None:
+        report.to_json(json_path, report=ctrl_report.to_dict(), **record)
+        print(f"# wrote {json_path}")
+    summary = report.summary()
+    summary.update(record)
+    summary["report"] = ctrl_report.to_dict()
+    return summary
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized trace (400 transfers / 4 hosts)")
+                    help="CI-sized trace (400 transfers / 4 hosts; "
+                         "10k transfers with --online)")
+    ap.add_argument("--online", action="store_true",
+                    help="benchmark the bounded-memory streaming loop")
     ap.add_argument("--json", default="BENCH_fleet.json",
                     help="where to write the BENCH record")
     args = ap.parse_args()
-    summary = run(smoke=args.smoke, json_path=args.json)
+    if args.online:
+        summary = run_online(smoke=args.smoke, json_path=args.json)
+    else:
+        summary = run(smoke=args.smoke, json_path=args.json)
     print(json.dumps({k: summary[k] for k in
                       ("transfers", "completed", "dropped", "sim_s",
                        "total_energy_j", "joules_per_gb", "slowdown",

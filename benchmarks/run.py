@@ -29,8 +29,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    default="fig2,fig3,fig4,micro,roofline,fleet,learn,"
-                            "dvfs")
+                    default="fig2,fig3,fig4,micro,roofline,fleet,"
+                            "fleet_online,learn,dvfs")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grids for fig2/fleet")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -104,6 +104,31 @@ def main() -> None:
         summary["fleet"] = {k: frec[k] for k in
                             ("transfers", "completed", "joules_per_gb",
                              "slowdown")}
+
+    if "fleet_online" in only:
+        from . import fleet as fleet_bench
+        orec = fleet_bench.run_online(smoke=args.smoke,
+                                      warm=args.json is not None)
+        # One metric name across smoke/full (the ISSUE-named gate metric);
+        # only the smoke record feeds the baseline, so scales never mix.
+        bench["fleet_online_wall_s"] = orec["wall_s"]
+        bench["fleet_online_transfers_per_sec"] = orec["transfers_per_sec"]
+        # Deliberately NOT a _per_sec suffix: peak RSS is informational
+        # trajectory data (machine-dependent), never perf-gated and never
+        # copied into the baseline by --rebaseline.
+        bench["fleet_online_peak_rss_mb"] = orec["peak_rss_mb"]
+        if "rss_growth" in orec:
+            bench["fleet_online_rss_growth"] = orec["rss_growth"]
+            bench["fleet_online_1m_transfers_per_sec"] = \
+                orec["transfers_per_sec_1m"]
+        prefix = "fleet_online_smoke" if args.smoke else "fleet_online"
+        reports[prefix] = orec["report"]
+        summary["fleet_online"] = {
+            "transfers": orec["transfers"],
+            "completed": orec["completed"],
+            "joules_per_gb": orec["joules_per_gb"],
+            "counters": orec["counters"],
+        }
 
     if "dvfs" in only:
         from . import fig_dvfs

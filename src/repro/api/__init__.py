@@ -45,8 +45,11 @@ from .tuning import TuneResult, crn_bw_schedule, tune  # noqa: F401
 # engine substrate and the controller registry above, so these re-exports
 # resolve lazily (PEP 562) — importing repro.fleet first must not recurse
 # back into a half-initialized repro.api.
-_FLEET_EXPORTS = ("FleetReport", "Host", "TransferRequest", "host_pool",
-                  "poisson_trace", "replay_trace", "run_fleet")
+_FLEET_EXPORTS = ("FleetReport", "Host", "OnlineConfig",
+                  "OnlineFleetReport", "TransferRequest", "diurnal_stream",
+                  "host_pool", "poisson_stream", "poisson_trace",
+                  "replay_stream", "replay_trace", "run_fleet",
+                  "run_fleet_online")
 
 
 def __getattr__(name):
@@ -61,15 +64,19 @@ __all__ = [
     "DvfsEnergyModel", "DvfsNetworkModel",
     "EnergyModel", "Environment", "Experiment", "FleetReport", "Host",
     "IsmailTargetController", "LossyWanNetworkModel", "NetworkModel",
+    "OnlineConfig", "OnlineFleetReport",
     "ReferenceEnergyModel", "ReferenceNetworkModel", "Report", "Scenario",
     "StaticBaselineController", "TransferRequest", "TransferResult",
     "TuneResult", "TunerController", "as_controller", "as_environment",
-    "axis", "chain", "clear_cache", "crn_bw_schedule", "fingerprint",
+    "axis", "chain", "clear_cache", "crn_bw_schedule", "diurnal_stream",
+    "fingerprint",
     "grid", "group_count", "host_pool", "list_controllers",
     "list_energy_models", "list_environments", "list_network_models",
     "make_controller", "make_energy_model", "make_environment",
-    "make_network_model", "poisson_trace", "register_controller",
+    "make_network_model", "poisson_stream", "poisson_trace",
+    "register_controller",
     "register_energy_model", "register_environment",
-    "register_network_model", "replay_trace", "run", "run_fleet",
+    "register_network_model", "replay_stream", "replay_trace", "run",
+    "run_fleet", "run_fleet_online",
     "scenario_key", "sweep", "tune", "zip_",
 ]

@@ -300,6 +300,41 @@ class Report:
         return cls.from_dict(json.loads(text))
 
     @classmethod
+    def from_rows(cls, rows: Iterable[Mapping], *, axes: Sequence[str],
+                  meta: Optional[dict] = None,
+                  derive: bool = True) -> "Report":
+        """Build incrementally from an iterable of row dicts.
+
+        The streaming-friendly constructor: ``rows`` may be any iterable
+        (a generator folding results as they retire — e.g. the online
+        fleet's per-controller rows), consumed once, appended column-wise.
+        Axis fields load as labels, everything else as float64 metrics
+        (``None`` → NaN, exactly like the mapping constructor).  Every row
+        must carry the same keys — a missing metric mid-stream raises
+        rather than silently misaligning columns.
+        """
+        axes = tuple(axes)
+        cols: dict[str, list] = {}
+        names: Optional[tuple] = None
+        for i, row in enumerate(rows):
+            if names is None:
+                names = tuple(row)
+                missing = [a for a in axes if a not in names]
+                if missing:
+                    raise ValueError(f"axes {missing} missing from rows")
+                cols = {name: [] for name in names}
+            elif set(row) != set(names):
+                raise ValueError(
+                    f"row {i} keys {sorted(row)} != first row's "
+                    f"{sorted(names)}")
+            for name in names:
+                v = row[name]
+                cols[name].append(str(v) if name in axes else v)
+        if names is None:              # empty iterable: zero-row report
+            cols = {a: [] for a in axes}
+        return cls(cols, axes=axes, meta=meta, derive=derive)
+
+    @classmethod
     def from_results(cls, labels: Sequence[Mapping[str, str]],
                      results: Sequence, *, axes: Sequence[str],
                      meta: Optional[dict] = None) -> "Report":

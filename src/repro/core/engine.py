@@ -807,7 +807,8 @@ def _resolve_wave_executor(executor: str, n_partitions) -> str:
 def get_wave_runner(controller_code, env_code, cpu: CpuProfile,
                     wave_steps: int, dt: float, ctrl_every: int,
                     executor: str = "auto",
-                    n_partitions: Optional[int] = None):
+                    n_partitions: Optional[int] = None,
+                    donate: bool = False):
     """Jitted, vmapped wave core, cached per (controller, environment) code
     group.
 
@@ -816,20 +817,36 @@ def get_wave_runner(controller_code, env_code, cpu: CpuProfile,
     frozen from tick 0.  With ``executor="blocked"`` the runner speaks the
     flat-row contract of :func:`build_blocked_wave_core` and needs the
     static ``n_partitions``.
+
+    ``donate=True`` donates the state-carry buffers (the flat f32/i32 rows
+    on ``blocked``, the SimState/TunerState pytrees on ``reference``) —
+    what the online fleet's persistent slot pools want: the pool's whole
+    ``[capacity, ...]`` arrays flow through every wave, so donation makes
+    the wave an in-place update instead of an alloc-and-copy.  Callers must
+    then treat the passed-in buffers as consumed.  Slot recycling composes
+    with the wave contract for free: a retired slot's rows are zeroed
+    (born-drained no-op lane) until the next admission overwrites them with
+    fresh tick-0 rows and re-enters the wave loop at ``step0 = 0`` —
+    ``done_at`` is relative to the *lane's* tick clock, not the fleet's, so
+    a recycled slot is indistinguishable from a new lane.
     """
     executor = _resolve_wave_executor(executor, n_partitions)
     key = (controller_code, env_code, cpu, wave_steps, dt, ctrl_every,
-           executor, n_partitions)
+           executor, n_partitions, donate)
 
     def build():
         if executor == "blocked":
             core = build_blocked_wave_core(
                 controller_code, env_code, cpu, wave_steps=wave_steps,
                 dt=dt, ctrl_every=ctrl_every, n_partitions=n_partitions)
+            donate_argnums = (2, 3)
         else:
             core = build_wave_core(controller_code, env_code, cpu,
                                    wave_steps=wave_steps, dt=dt,
                                    ctrl_every=ctrl_every)
+            donate_argnums = (1, 2)
+        if donate:
+            return jax.jit(jax.vmap(core), donate_argnums=donate_argnums)
         return jax.jit(jax.vmap(core))
 
     return _cached("wave", key, build)

@@ -29,11 +29,68 @@ Stacked-layer params carry a leading L axis -> prepend None.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
+from typing import Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Global device-mesh configuration (Alpa-style options surface).
+
+    Describes a fleet's execution substrate as ``num_hosts`` processes of
+    ``devices_per_host`` accelerators each, flattened into a single 1-D
+    ``batch`` mesh for the slot-pool wave runners.  The online fleet loop
+    (``repro.fleet.online``) treats the config as the *logical* mesh:
+    admission and slot assignment run on host 0 (deterministic — every
+    lane's slot index is a pure function of the arrival stream, so all
+    hosts agree on the broadcast layout), and slot pools are padded to a
+    multiple of the mesh size so ``shard_batch`` placements divide evenly.
+
+    ``None`` fields auto-detect: one host, all local devices.  ``.devices()``
+    validates the request against what the runtime actually exposes —
+    asking for an 8-device mesh in a 1-device process raises rather than
+    silently running unsharded (force CPU device counts in tests with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+
+    num_hosts: int = 1
+    devices_per_host: Optional[int] = None
+
+    def __post_init__(self):
+        if self.num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {self.num_hosts}")
+        if self.devices_per_host is not None and self.devices_per_host < 1:
+            raise ValueError(f"devices_per_host must be >= 1, got "
+                             f"{self.devices_per_host}")
+
+    @property
+    def mesh_size(self) -> Optional[int]:
+        if self.devices_per_host is None:
+            return None
+        return self.num_hosts * self.devices_per_host
+
+    def devices(self) -> tuple:
+        """The flattened (hosts x devices_per_host) device tuple, validated
+        against the runtime's visible devices."""
+        avail = tuple(jax.devices())
+        want = self.mesh_size
+        if want is None:
+            return avail
+        if want > len(avail):
+            raise ValueError(
+                f"MeshConfig wants {self.num_hosts} hosts x "
+                f"{self.devices_per_host} devices = {want}, but only "
+                f"{len(avail)} devices are visible")
+        return avail[:want]
+
+    def mesh(self) -> Mesh:
+        """1-D ``batch`` mesh over :meth:`devices`."""
+        return batch_mesh(self.devices())
 
 
 def set_mesh(mesh: Mesh):

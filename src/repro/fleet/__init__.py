@@ -30,14 +30,25 @@ Quickstart::
         profile=CHAMELEON)
     report = fleet.run_fleet(trace, hosts, wave_s=30.0, dt=0.1)
     print(report.summary())
+
+For *unbounded* arrival streams — online operation with fixed host memory
+regardless of stream length — see :func:`run_fleet_online`
+(``repro.fleet.online``) and the stream adapters (``poisson_stream``,
+``diurnal_stream``, ``replay_stream``).
 """
-from .aggregates import FleetReport, FleetTransfer  # noqa: F401
-from .arrivals import (TransferRequest, poisson_trace,  # noqa: F401
+from .aggregates import (FleetFold, FleetReport,  # noqa: F401
+                         FleetTransfer, OnlineFleetReport, QuantileSketch)
+from .arrivals import (TransferRequest, diurnal_stream,  # noqa: F401
+                       poisson_stream, poisson_trace, replay_stream,
                        replay_trace)
 from .hosts import Host, host_pool  # noqa: F401
+from .online import OnlineConfig, run_fleet_online  # noqa: F401
+from .ringbuf import SlotPool  # noqa: F401
 from .scheduler import run_fleet  # noqa: F401
 
 __all__ = [
-    "FleetReport", "FleetTransfer", "Host", "TransferRequest", "host_pool",
-    "poisson_trace", "replay_trace", "run_fleet",
+    "FleetFold", "FleetReport", "FleetTransfer", "Host", "OnlineConfig",
+    "OnlineFleetReport", "QuantileSketch", "SlotPool", "TransferRequest",
+    "diurnal_stream", "host_pool", "poisson_stream", "poisson_trace",
+    "replay_stream", "replay_trace", "run_fleet", "run_fleet_online",
 ]

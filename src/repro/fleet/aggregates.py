@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from collections import defaultdict
 from typing import Optional
 
@@ -97,11 +98,14 @@ class FleetReport:
 
     @property
     def total_energy_j(self) -> float:
-        return float(sum(t.energy_j for t in self.transfers))
+        # fsum, not sum: exact summation makes totals independent of
+        # accumulation order, so the online loop (which folds transfers in
+        # retirement order) reproduces these bit-for-bit.
+        return math.fsum(t.energy_j for t in self.transfers)
 
     @property
     def total_gb(self) -> float:
-        return float(sum(t.moved_mb for t in self.transfers)) / 1024.0
+        return math.fsum(t.moved_mb for t in self.transfers) / 1024.0
 
     @property
     def joules_per_gb(self) -> float:
@@ -126,8 +130,10 @@ class FleetReport:
         out = {}
         for name in sorted(groups):
             ts = groups[name]
-            gb = sum(t.moved_mb for t in ts) / 1024.0
-            energy = sum(t.energy_j for t in ts)
+            # fsum / fsum-mean: order-independent, so the online fold (in
+            # retirement order) matches these bit-for-bit.
+            gb = math.fsum(t.moved_mb for t in ts) / 1024.0
+            energy = math.fsum(t.energy_j for t in ts)
             out[name] = {
                 "transfers": len(ts),
                 "completed": sum(t.completed for t in ts),
@@ -136,8 +142,8 @@ class FleetReport:
                 "joules_per_gb": float(energy / max(gb, 1e-9)),
                 "slowdown": _percentiles(
                     [t.slowdown for t in ts if t.completed]),
-                "mean_time_s": float(np.mean([t.time_s for t in ts])),
-                "mean_wait_s": float(np.mean([t.wait_s for t in ts])),
+                "mean_time_s": math.fsum(t.time_s for t in ts) / len(ts),
+                "mean_wait_s": math.fsum(t.wait_s for t in ts) / len(ts),
             }
         return out
 
@@ -162,6 +168,283 @@ class FleetReport:
     def to_json(self, path: Optional[str] = None, **extra) -> str:
         """Serialize ``summary()`` (+ caller extras, e.g. wall-clock) to
         JSON; writes to ``path`` when given."""
+        payload = dict(self.summary(), **extra)
+        text = json.dumps(payload, indent=2, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+
+# ===================================================================== #
+# Streaming aggregation — the bounded-memory mirror of FleetReport.     #
+# ===================================================================== #
+
+
+class ExactSum:
+    """Exactly rounded streaming sum (Shewchuk's adaptive partials).
+
+    ``add`` maintains a list of non-overlapping partials whose exact sum is
+    the exact sum of everything added; ``value`` rounds it once, via
+    ``math.fsum`` over the partials.  The result is therefore *independent
+    of accumulation order* — the property that lets the online loop, which
+    folds transfers in retirement order, reproduce the offline
+    ``math.fsum`` totals (taken in sorted-trace order) bit-for-bit.  The
+    partials list stays tiny (its length is bounded by the exponent spread
+    of the inputs, ~40 entries for fleet magnitudes), so memory is O(1).
+    """
+
+    __slots__ = ("_partials",)
+
+    def __init__(self):
+        self._partials: list[float] = []
+
+    def add(self, x: float) -> None:
+        # Standard error-free transformation: after the loop, partials are
+        # non-overlapping and sum exactly to (old partials sum) + x.
+        x = float(x)
+        partials = self._partials
+        i = 0
+        for y in partials:
+            if abs(x) < abs(y):
+                x, y = y, x
+            hi = x + y
+            lo = y - (hi - x)
+            if lo:
+                partials[i] = lo
+                i += 1
+            x = hi
+        partials[i:] = [x]
+
+    def value(self) -> float:
+        return math.fsum(self._partials)
+
+
+class QuantileSketch:
+    """Deterministic bounded-memory quantile sketch (DDSketch-style).
+
+    Values land in geometric buckets ``gamma**k`` with
+    ``gamma = (1 + rel_err) / (1 - rel_err)``; a quantile query returns the
+    geometric midpoint of the bucket holding the target rank, which is
+    within ``rel_err`` *relative* error of the true value for everything
+    inside the clamp range ``[lo, hi]`` (values outside are clamped into
+    the boundary buckets).  The bucket array is fixed at construction —
+    ~2.3k int64 counts at the defaults — so memory never grows with the
+    stream, and the sketch is deterministic: the same multiset of values
+    produces the same counts regardless of arrival order.
+
+    This is the documented tolerance on online percentile parity: p50/p95/
+    p99 from the sketch match ``np.percentile`` of the materialized values
+    to within ``rel_err`` relative error (plus interpolation differences —
+    ``np.percentile`` interpolates between order statistics, the sketch
+    answers with a nearest-rank bucket midpoint).
+    """
+
+    __slots__ = ("rel_err", "gamma", "_log_gamma", "lo", "hi", "_kmin",
+                 "counts", "n", "_zero")
+
+    def __init__(self, rel_err: float = 0.01, lo: float = 1e-4,
+                 hi: float = 1e8):
+        if not 0.0 < rel_err < 1.0:
+            raise ValueError(f"rel_err must be in (0, 1), got {rel_err}")
+        if not 0.0 < lo < hi:
+            raise ValueError(f"need 0 < lo < hi, got lo={lo}, hi={hi}")
+        self.rel_err = float(rel_err)
+        self.gamma = (1.0 + rel_err) / (1.0 - rel_err)
+        self._log_gamma = math.log(self.gamma)
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self._kmin = math.floor(math.log(lo) / self._log_gamma)
+        kmax = math.ceil(math.log(hi) / self._log_gamma)
+        self.counts = np.zeros(kmax - self._kmin + 1, np.int64)
+        self.n = 0
+        self._zero = 0                  # values <= 0 (count-only bucket)
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        if x <= 0.0:
+            self._zero += 1
+            return
+        x = min(max(x, self.lo), self.hi)
+        k = math.ceil(math.log(x) / self._log_gamma) - self._kmin
+        self.counts[min(max(k, 0), len(self.counts) - 1)] += 1
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Nearest-rank quantile, or None for an empty sketch."""
+        if self.n == 0:
+            return None
+        rank = min(int(math.ceil(q * self.n)), self.n)
+        if rank <= self._zero:
+            return 0.0
+        seen = self._zero
+        for k, c in enumerate(self.counts):
+            seen += int(c)
+            if seen >= rank:
+                # Geometric bucket midpoint: bucket k covers
+                # (gamma**(k-1+kmin), gamma**(k+kmin)].
+                return math.exp((k + self._kmin - 0.5) * self._log_gamma)
+        return self.hi                   # unreachable (counts sum to n-zero)
+
+    def percentiles(self) -> dict:
+        return {"p50": self.quantile(0.50),
+                "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99)}
+
+
+class _GroupFold:
+    """Streaming per-group totals mirroring one ``by_controller()`` row."""
+
+    __slots__ = ("transfers", "completed", "energy", "moved_mb", "time_s",
+                 "wait_s", "slowdown")
+
+    def __init__(self, rel_err: float):
+        self.transfers = 0
+        self.completed = 0
+        self.energy = ExactSum()
+        self.moved_mb = ExactSum()
+        self.time_s = ExactSum()
+        self.wait_s = ExactSum()
+        self.slowdown = QuantileSketch(rel_err)
+
+    def add(self, t: FleetTransfer) -> None:
+        self.transfers += 1
+        self.completed += t.completed
+        self.energy.add(t.energy_j)
+        self.moved_mb.add(t.moved_mb)
+        self.time_s.add(t.time_s)
+        self.wait_s.add(t.wait_s)
+        if t.completed:
+            self.slowdown.add(t.slowdown)
+
+    def row(self) -> dict:
+        gb = self.moved_mb.value() / 1024.0
+        energy = self.energy.value()
+        return {
+            "transfers": self.transfers,
+            "completed": self.completed,
+            "energy_j": energy,
+            "gb": gb,
+            "joules_per_gb": energy / max(gb, 1e-9),
+            "slowdown": self.slowdown.percentiles(),
+            "mean_time_s": self.time_s.value() / max(self.transfers, 1),
+            "mean_wait_s": self.wait_s.value() / max(self.transfers, 1),
+        }
+
+
+class FleetFold:
+    """Incremental FleetReport: fold retirements one at a time, in any
+    order, into O(1) state.
+
+    Totals (energy, GB, joules/GB, per-controller sums and means) are
+    *exact* — :class:`ExactSum` makes them independent of fold order, so
+    they bit-match the offline ``FleetReport`` of the same transfers.
+    Percentile fields come from :class:`QuantileSketch` and carry its
+    documented ``rel_err`` relative-error tolerance instead.
+    """
+
+    def __init__(self, rel_err: float = 0.01):
+        self._total = _GroupFold(rel_err)
+        self._by_ctrl: dict[str, _GroupFold] = {}
+        self._rel_err = rel_err
+
+    def add(self, t: FleetTransfer) -> None:
+        self._total.add(t)
+        g = self._by_ctrl.get(t.controller)
+        if g is None:
+            g = self._by_ctrl[t.controller] = _GroupFold(self._rel_err)
+        g.add(t)
+
+    @property
+    def transfers(self) -> int:
+        return self._total.transfers
+
+    @property
+    def completed(self) -> int:
+        return self._total.completed
+
+    @property
+    def total_energy_j(self) -> float:
+        return self._total.energy.value()
+
+    @property
+    def total_gb(self) -> float:
+        return self._total.moved_mb.value() / 1024.0
+
+    def slowdowns(self) -> dict:
+        return self._total.slowdown.percentiles()
+
+    def by_controller(self) -> dict:
+        return {name: self._by_ctrl[name].row()
+                for name in sorted(self._by_ctrl)}
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineFleetReport:
+    """What an online fleet run produced — ``FleetReport``'s bounded-memory
+    sibling.
+
+    ``summary()`` carries the same keys as :meth:`FleetReport.summary` (so
+    BENCH records and downstream tables are drop-in) plus a ``"counters"``
+    block of per-run observability totals from the wave loop.  There is no
+    ``transfers`` tuple by default — aggregates were folded incrementally —
+    but runs with ``track_transfers=True`` (a debug/parity knob that
+    re-introduces O(n) memory) retain the per-transfer records, sorted by
+    ``(start_s, name)``.
+    """
+
+    fold: FleetFold
+    host_stats: tuple
+    sim_s: float
+    waves: int
+    wave_s: float
+    dt: float
+    dropped: int = 0
+    counters: dict = dataclasses.field(default_factory=dict)
+    transfers: Optional[tuple] = None   # only when track_transfers=True
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.fold.total_energy_j
+
+    @property
+    def total_gb(self) -> float:
+        return self.fold.total_gb
+
+    @property
+    def joules_per_gb(self) -> float:
+        return self.total_energy_j / max(self.total_gb, 1e-9)
+
+    @property
+    def completed(self) -> int:
+        return self.fold.completed
+
+    def slowdowns(self) -> dict:
+        return self.fold.slowdowns()
+
+    def by_controller(self) -> dict:
+        return self.fold.by_controller()
+
+    def summary(self) -> dict:
+        return {
+            "transfers": self.fold.transfers,
+            "completed": self.completed,
+            "dropped": self.dropped,
+            "hosts": len(self.host_stats),
+            "sim_s": self.sim_s,
+            "waves": self.waves,
+            "total_energy_j": self.total_energy_j,
+            "total_gb": self.total_gb,
+            "joules_per_gb": self.joules_per_gb,
+            "slowdown": self.slowdowns(),
+            "host_busy_frac": {h.name: h.busy_frac
+                               for h in self.host_stats},
+            "host_nic_util": {h.name: h.nic_util for h in self.host_stats},
+            "by_controller": self.by_controller(),
+            "counters": dict(self.counters),
+        }
+
+    def to_json(self, path: Optional[str] = None, **extra) -> str:
         payload = dict(self.summary(), **extra)
         text = json.dumps(payload, indent=2, sort_keys=True)
         if path is not None:

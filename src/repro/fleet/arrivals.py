@@ -1,8 +1,9 @@
-"""Arrival traces: what arrives when, carrying what, tuned by whom.
+"""Arrival traces and streams: what arrives when, carrying what.
 
-A trace is a tuple of :class:`TransferRequest` — plain frozen metadata; all
-numeric state lives in the engine once the scheduler admits the request.
-Two constructors cover the workload classes the fleet layer targets:
+A **trace** is a tuple of :class:`TransferRequest` — plain frozen metadata;
+all numeric state lives in the engine once the scheduler admits the
+request.  Two constructors cover the workload classes the offline fleet
+layer targets:
 
 * :func:`poisson_trace` — synthetic open-loop arrivals (exponential
   inter-arrival gaps from a seeded generator, controllers/datasets cycled
@@ -14,11 +15,31 @@ Both are deterministic: the same inputs produce the same trace, and
 ``run_fleet`` is invariant to the *order* of the trace tuple (it sorts by
 arrival time with a content tie-break), so shuffling a trace never changes
 fleet totals.
+
+A **stream** is the online analogue (``repro.fleet.online``): a plain
+Python generator yielding :class:`TransferRequest` in nondecreasing
+``arrival_s`` order, possibly unbounded.  Three adapters mirror the trace
+constructors:
+
+* :func:`poisson_stream` — unbounded open-loop Poisson arrivals (one rng
+  draw group per item, so memory is O(1) regardless of length);
+* :func:`diurnal_stream` — Poisson arrivals with a raised-cosine daily
+  rate profile (thinning against the peak rate), the operator-scale
+  day/night load shape;
+* :func:`replay_stream` — any in-order iterable of requests (e.g. a
+  sorted trace, or records parsed lazily from a log), validated for
+  monotone arrivals as it is consumed.
+
+Streams and traces draw from *different rng consumption orders*
+(vectorized vs. per-item), so ``poisson_stream`` and ``poisson_trace``
+with the same seed yield different (equally valid) workloads — the traces
+are pinned by golden tests and must not change.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+import math
+from typing import Any, Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -129,7 +150,8 @@ def replay_trace(records: Sequence[dict], *,
     for i, rec in enumerate(records):
         unknown = set(rec) - _REPLAY_FIELDS
         if unknown:
-            raise ValueError(f"record {i} has unknown fields {sorted(unknown)}")
+            raise ValueError(
+                f"record {i} has unknown fields {sorted(unknown)}")
         rec = dict(rec)
         if "profile" not in rec:
             if profile is None:
@@ -138,3 +160,115 @@ def replay_trace(records: Sequence[dict], *,
             rec["profile"] = profile
         out.append(TransferRequest(**rec))
     return tuple(out)
+
+
+# ===================================================================== #
+# Streams — unbounded, in-order generators for the online fleet loop.   #
+# ===================================================================== #
+
+
+def _sample_request(rng, t, i, width, datasets, controllers, profile,
+                    total_s, name_prefix):
+    return TransferRequest(
+        arrival_s=float(t),
+        datasets=datasets[int(rng.integers(0, len(datasets)))],
+        controller=controllers[int(rng.integers(0, len(controllers)))],
+        profile=profile,
+        name=f"{name_prefix}-{i:0{width}d}",
+        total_s=total_s,
+    )
+
+
+def poisson_stream(*, rate_per_s: float, datasets: Sequence[tuple],
+                   controllers: Sequence[Any], profile: NetworkProfile,
+                   seed: int = 0, n_transfers: Optional[int] = None,
+                   total_s: float = 3600.0,
+                   name_prefix: str = "xfer",
+                   ) -> Iterator[TransferRequest]:
+    """Unbounded open-loop Poisson arrival stream.
+
+    The streaming sibling of :func:`poisson_trace`: exponential gaps at
+    ``rate_per_s``, dataset and controller sampled per arrival from a
+    ``np.random.default_rng(seed)`` stream.  Memory is O(1) — one rng draw
+    group per yielded item, nothing materialized.  ``n_transfers`` bounds
+    the stream for tests/benchmarks; ``None`` streams forever (bound the
+    run with ``OnlineConfig.horizon_s`` instead).
+
+    Note: per-item rng consumption differs from ``poisson_trace``'s
+    vectorized draws, so the same seed yields a *different* workload than
+    the trace constructor — both deterministic, not interchangeable.
+    """
+    if rate_per_s <= 0:
+        raise ValueError(f"rate_per_s must be positive, got {rate_per_s}")
+    datasets = tuple(tuple(d) for d in datasets)
+    controllers = tuple(controllers)
+    rng = np.random.default_rng(seed)
+    width = len(str(n_transfers - 1)) if n_transfers else 7
+    t = 0.0
+    i = 0
+    while n_transfers is None or i < n_transfers:
+        t += float(rng.exponential(1.0 / rate_per_s))
+        yield _sample_request(rng, t, i, width, datasets, controllers,
+                              profile, total_s, name_prefix)
+        i += 1
+
+
+def diurnal_stream(*, base_rate_per_s: float, peak_rate_per_s: float,
+                   period_s: float, datasets: Sequence[tuple],
+                   controllers: Sequence[Any], profile: NetworkProfile,
+                   seed: int = 0, n_transfers: Optional[int] = None,
+                   total_s: float = 3600.0,
+                   name_prefix: str = "xfer",
+                   ) -> Iterator[TransferRequest]:
+    """Poisson arrivals with a raised-cosine diurnal rate profile.
+
+    Instantaneous rate
+    ``rate(t) = base + (peak - base) * 0.5 * (1 - cos(2*pi*t/period_s))``
+    — troughs at multiples of ``period_s`` (night), crests halfway (day).
+    Sampled by Lewis–Shedler thinning against ``peak_rate_per_s``:
+    candidate arrivals are drawn at the peak rate and kept with probability
+    ``rate(t)/peak``, which is exact for any bounded rate function and
+    stays O(1) memory.
+    """
+    if not 0.0 < base_rate_per_s <= peak_rate_per_s:
+        raise ValueError(f"need 0 < base <= peak, got base="
+                         f"{base_rate_per_s}, peak={peak_rate_per_s}")
+    if period_s <= 0:
+        raise ValueError(f"period_s must be positive, got {period_s}")
+    datasets = tuple(tuple(d) for d in datasets)
+    controllers = tuple(controllers)
+    rng = np.random.default_rng(seed)
+    width = len(str(n_transfers - 1)) if n_transfers else 7
+    t = 0.0
+    i = 0
+    while n_transfers is None or i < n_transfers:
+        # Thinning: draw at the envelope rate, accept at rate(t)/peak.
+        t += float(rng.exponential(1.0 / peak_rate_per_s))
+        rate = base_rate_per_s + (peak_rate_per_s - base_rate_per_s) * (
+            0.5 * (1.0 - math.cos(2.0 * math.pi * t / period_s)))
+        if float(rng.random()) * peak_rate_per_s > rate:
+            continue
+        yield _sample_request(rng, t, i, width, datasets, controllers,
+                              profile, total_s, name_prefix)
+        i += 1
+
+
+def replay_stream(requests: Iterable[TransferRequest],
+                  ) -> Iterator[TransferRequest]:
+    """Adapt any in-order iterable of requests into a validated stream.
+
+    Yields items unchanged, checking nondecreasing ``arrival_s`` as the
+    stream is consumed — the online loop's admission clock only moves
+    forward, so an out-of-order arrival would be silently starved instead
+    of scheduled.  Feed it a sorted offline trace for online/offline
+    parity runs, or a lazy log parser for replay at scale.
+    """
+    last = -math.inf
+    for i, req in enumerate(requests):
+        if req.arrival_s < last:
+            raise ValueError(
+                f"stream is not in arrival order: item {i} "
+                f"({req.name!r}) arrives at {req.arrival_s} after "
+                f"{last}")
+        last = req.arrival_s
+        yield req

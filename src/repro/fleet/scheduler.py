@@ -40,6 +40,11 @@ on the default ``blocked`` executor a wave batch is five ``np.stack`` calls
 pytree stack/unstack traffic — which was the dominant host cost of the
 fleet hot loop.  ``executor="reference"`` keeps the pytree wave contract as
 the golden parity path.
+
+The admission/rescale decisions themselves (combo preparation, host
+picking, NIC shares, tick budgets, retirement records) live in
+``repro.fleet.admission`` and are shared verbatim with the bounded-memory
+online loop (``repro.fleet.online``) — one implementation, two drivers.
 """
 from __future__ import annotations
 
@@ -51,58 +56,13 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
-from repro.api.controllers import as_controller
-from repro.api.environments import as_environment
-from repro.api.scenario import ctrl_stride, pad_partition_inputs
 from repro.core import engine, tickstate
-from repro.core.engine import ScanInputs
 
+from .admission import (Combo, budget_steps, combo_key, make_transfer,
+                        nic_shares, pick_host)
 from .aggregates import FleetReport, FleetTransfer, HostStats
 from .arrivals import TransferRequest, request_sort_key
 from .hosts import Host
-
-
-class _Combo:
-    """Prepared admission state for one unique
-    (controller, datasets, profile, cpu, environment) combination."""
-
-    __slots__ = ("inputs", "state0", "params_row", "f0", "i0", "key",
-                 "ctrl_name", "env", "n_partitions", "ideal_s")
-
-    def __init__(self, req: TransferRequest, host: Host, dt: float):
-        ctrl = as_controller(req.controller)
-        env = as_environment(host.environment)
-        ci = ctrl.init(req.datasets, req.profile, host.cpu)
-        inputs = ScanInputs.from_init(ci, req.profile, 1)
-        # Scalar bandwidth share (the wave engine hook) instead of the
-        # [n_steps] schedule single-scenario runs use.
-        inputs = inputs._replace(bw=np.float32(1.0))
-        self.inputs = jax.tree.map(np.asarray, inputs)
-        self.state0 = jax.tree.map(np.asarray, ci.state)
-        self.params_row = None         # set by finalize()
-        self.f0 = None
-        self.i0 = None
-        self.env = env
-        self.key = (ctrl.code(), env.code(), host.cpu,
-                    ctrl_stride(ctrl, dt))
-        self.ctrl_name = ctrl.name
-        self.n_partitions = len(ci.specs)
-        total_mb = float(np.sum(self.inputs.total_mb))
-        self.ideal_s = total_mb / max(req.profile.bandwidth_mbps, 1e-9)
-
-    def finalize(self, n_partitions: int) -> None:
-        """Widen to the trace-wide partition count and pack the flat
-        admission rows: the shared parameter row plus the tick-0 state rows
-        (through the environment's NetworkModel), all host-side numpy — one
-        pack per combo, shared by every admission of it."""
-        self.inputs = pad_partition_inputs(self.inputs, n_partitions)
-        lay = tickstate.TickLayout(n_partitions)
-        sim0 = jax.tree.map(
-            np.asarray,
-            self.env.network.init_state(self.inputs.total_mb,
-                                        self.inputs.net))
-        self.params_row = lay.pack_params(self.inputs, xp=np)
-        self.f0, self.i0 = lay.pack_state(sim0, self.state0, xp=np)
 
 
 @dataclasses.dataclass
@@ -116,38 +76,13 @@ class _Lane:
     seq: int                       # admission order (stable report order)
     req: TransferRequest
     host_idx: int
-    combo: _Combo
+    combo: Combo
     st_f32: np.ndarray             # flat f32 state row (TickLayout)
     st_i32: np.ndarray             # flat i32 state row (TickLayout)
     start_s: float
     budget_steps: int
     steps_done: int = 0
     done_at: int = -1
-
-
-def _pick_host(req: TransferRequest, hosts: Sequence[Host],
-               active: list, assignment: str, rr: list) -> Optional[int]:
-    """Host index for an admission, or None when no slot is free."""
-    def free(i):
-        return hosts[i].slots == 0 or active[i] < hosts[i].slots
-
-    if req.host is not None:
-        if not 0 <= req.host < len(hosts):
-            raise ValueError(f"request {req.name!r} pinned to host "
-                             f"{req.host}, pool has {len(hosts)}")
-        return req.host if free(req.host) else None
-    if assignment == "least-loaded":
-        order = sorted(range(len(hosts)), key=lambda i: (active[i], i))
-    elif assignment == "round-robin":
-        order = [(rr[0] + k) % len(hosts) for k in range(len(hosts))]
-    else:
-        raise ValueError(f"unknown assignment policy {assignment!r}")
-    for i in order:
-        if free(i):
-            if assignment == "round-robin":
-                rr[0] = (i + 1) % len(hosts)
-            return i
-    return None
 
 
 def _stack(trees):
@@ -265,17 +200,14 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     # splits files *within* partitions), so p_max from the pre-pass also
     # covers combos created later for other hosts' CPU profiles or
     # environments.
-    combos: dict[tuple, _Combo] = {}
+    combos: dict[tuple, Combo] = {}
     p_max = 0
     finalized = False
 
-    def combo_for(req: TransferRequest, host: Host) -> _Combo:
-        ck = (req.controller if isinstance(req.controller, str)
-              else as_controller(req.controller),
-              req.datasets, req.profile, host.cpu,
-              as_environment(host.environment))
+    def combo_for(req: TransferRequest, host: Host) -> Combo:
+        ck = combo_key(req, host)
         if ck not in combos:
-            c = _Combo(req, host, dt)
+            c = Combo(req, host, dt)
             # Combos created after the pre-pass (an unpinned request landing
             # on a host whose (cpu, environment) no earlier combo covered)
             # finalize immediately: p_max is already trace-wide.
@@ -309,21 +241,16 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     waves_run = 0
 
     def retire(ln: _Lane) -> None:
-        completed = lay.remaining_sum(ln.st_f32) <= 0.0
-        if completed:
-            time_s = float(dt * (ln.done_at + 1))
-        else:
-            time_s = float(dt * ln.steps_done)
-        results.append(FleetTransfer(
+        results.append(make_transfer(
+            lay, ln.st_f32,
             name=ln.req.name or f"xfer-{ln.seq}",
             controller=ln.combo.ctrl_name,
             host=hosts[ln.host_idx].name,
             arrival_s=ln.req.arrival_s,
             start_s=ln.start_s,
-            time_s=time_s,
-            energy_j=lay.energy_j(ln.st_f32),
-            moved_mb=lay.bytes_moved(ln.st_f32),
-            completed=completed,
+            steps_done=ln.steps_done,
+            done_at=ln.done_at,
+            dt=dt,
             ideal_s=ln.combo.ideal_s,
         ))
         active[ln.host_idx] -= 1
@@ -337,7 +264,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             ai += 1
         still = []
         for req in waiting:
-            h = _pick_host(req, hosts, active, assignment, rr)
+            h = pick_host(req, hosts, active, assignment, rr)
             if h is None:
                 still.append(req)
                 continue
@@ -345,7 +272,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             lanes.append(_Lane(
                 seq=seq, req=req, host_idx=h, combo=combo,
                 st_f32=combo.f0, st_i32=combo.i0, start_s=now,
-                budget_steps=max(int(round(req.total_s / dt)), 1)))
+                budget_steps=budget_steps(req, dt)))
             seq += 1
             active[h] += 1
             peak[h] = max(peak[h], active[h])
@@ -362,8 +289,7 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
         demand = [0.0] * len(hosts)
         for ln in lanes:
             demand[ln.host_idx] += ln.req.profile.bandwidth_mbps
-        share = [min(1.0, hosts[i].nic_mbps / d) if d > 0 else 1.0
-                 for i, d in enumerate(demand)]
+        share = nic_shares(hosts, demand)
 
         moved_before = [lay.bytes_moved(ln.st_f32) for ln in lanes]
         groups: dict[tuple, list[int]] = defaultdict(list)

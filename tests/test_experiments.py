@@ -258,6 +258,28 @@ def test_report_none_loads_as_nan():
     assert np.isnan(back["p99"][0])
 
 
+def test_report_from_rows_streaming_constructor():
+    """from_rows over a generator == the mapping constructor, bit-exact."""
+    rows = ({"tool": f"t{i}", "energy_j": float(i), "p99": None}
+            for i in range(3))
+    r = api.Report.from_rows(rows, axes=("tool",), derive=False,
+                             meta={"experiment": "x"})
+    want = api.Report({"tool": ["t0", "t1", "t2"],
+                       "energy_j": [0.0, 1.0, 2.0],
+                       "p99": [None] * 3}, axes=("tool",), derive=False,
+                      meta={"experiment": "x"})
+    assert r.to_json() == want.to_json()
+
+    empty = api.Report.from_rows(iter(()), axes=("tool",), derive=False)
+    assert len(empty) == 0 and empty.axes == ("tool",)
+
+    with pytest.raises(ValueError, match="row 1"):
+        api.Report.from_rows([{"tool": "a", "m": 1.0}, {"tool": "b"}],
+                             axes=("tool",))
+    with pytest.raises(ValueError, match="axes"):
+        api.Report.from_rows([{"m": 1.0}], axes=("tool",))
+
+
 # ------------------------------------------------------------------ cache --
 
 def test_cache_hit_and_resume(tmp_path):

@@ -256,6 +256,73 @@ def test_api_reexports_fleet_entry_points():
     assert api.TransferRequest is fleet.TransferRequest
 
 
+def test_empty_trace():
+    rep = fleet.run_fleet([], fleet.host_pool(2, nic_mbps=NO_CONTENTION),
+                          wave_s=5.0, dt=0.1)
+    assert len(rep.transfers) == 0
+    assert rep.sim_s == 0.0 and rep.waves == 0 and rep.dropped == 0
+    assert rep.total_energy_j == 0.0
+    import json
+    json.loads(rep.to_json())
+
+
+def test_trace_shorter_than_one_wave():
+    """One transfer finishing mid-wave: a single wave runs and retires it."""
+    req = fleet.TransferRequest(arrival_s=0.0, datasets=ONE,
+                                controller="wget/curl", profile=CHAMELEON,
+                                name="tiny", total_s=600.0)
+    rep = fleet.run_fleet([req], fleet.host_pool(1, nic_mbps=NO_CONTENTION),
+                          wave_s=30.0, dt=0.1)
+    t = rep.transfers[0]
+    assert t.completed and t.time_s < 30.0
+    assert rep.waves == 1
+
+
+# Golden per-transfer values captured before the admission logic moved to
+# repro.fleet.admission (shared with the online loop): the offline path
+# must stay bit-for-bit unchanged through that refactor and any future
+# one.  (name -> energy_j, time_s, start_s, host, completed.)
+_GOLDEN = {
+    "xfer-00": (1814.7784423828125, 116.0, 10.0, "host-0", True),
+    "xfer-01": (195.69314575195312, 10.5, 10.0, "host-1", True),
+    "xfer-02": (36.4241943359375, 3.5, 10.0, "host-0", True),
+    "xfer-03": (370.8283386230469, 37.0, 20.0, "host-0", True),
+    "xfer-04": (47.423377990722656, 3.0, 20.0, "host-1", True),
+    "xfer-05": (370.8283386230469, 37.0, 20.0, "host-0", True),
+    "xfer-06": (37.65775680541992, 4.0, 20.0, "host-1", True),
+    "xfer-07": (142.826171875, 8.5, 20.0, "host-0", True),
+    "xfer-08": (142.826171875, 8.5, 30.0, "host-1", True),
+    "xfer-09": (45.65776062011719, 5.0, 30.0, "host-1", True),
+    "xfer-10": (142.826171875, 8.5, 30.0, "host-1", True),
+    "xfer-11": (327.93096923828125, 34.0, 30.0, "host-0", True),
+    "xfer-12": (45.65776062011719, 5.0, 30.0, "host-1", True),
+    "xfer-13": (47.423377990722656, 3.0, 40.0, "host-1", True),
+    "xfer-14": (47.423377990722656, 3.0, 40.0, "host-1", True),
+    "xfer-15": (237.29710388183594, 16.5, 40.0, "host-1", True),
+}
+
+
+def test_offline_golden_cells_bit_exact():
+    import math
+    trace = fleet.poisson_trace(
+        rate_per_s=0.5, n_transfers=16,
+        datasets=[ONE, FAST, (DatasetSpec("a", 2000, 4000.0, 2.0),)],
+        controllers=("eemt", "me", "wget/curl"), profile=CHAMELEON,
+        seed=1810, total_s=600.0)
+    rep = fleet.run_fleet(trace,
+                          fleet.host_pool(2, nic_mbps=CHAMELEON.bandwidth_mbps,
+                                          slots=4),
+                          wave_s=10.0, dt=0.5)
+    got = _fleet_by_name(rep)
+    assert set(got) == set(_GOLDEN)
+    for name, (energy, time_s, start_s, host, done) in _GOLDEN.items():
+        t = got[name]
+        assert (t.energy_j, t.time_s, t.start_s, t.host, t.completed) == \
+            (energy, time_s, start_s, host, done), name
+    assert rep.total_energy_j == math.fsum(v[0] for v in _GOLDEN.values())
+    assert (rep.sim_s, rep.waves) == (130.0, 12)
+
+
 def test_heterogeneous_cpu_pools_group_separately():
     """Hosts with different CPU profiles compile separate wave runners but
     still produce complete, sane results."""

@@ -1,7 +1,7 @@
 """Benchmark harness entry point: one module per paper figure/table.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fig2,fig3,fig4,micro,roofline,fleet,learn,dvfs] \
+        [--only fig2,fig3,fig4,micro,roofline,fleet,learn,dvfs,workloads] \
         [--smoke] [--json BENCH_perf.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark cell) and a
@@ -30,7 +30,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
                     default="fig2,fig3,fig4,micro,roofline,fleet,"
-                            "fleet_online,learn,dvfs")
+                            "fleet_online,learn,dvfs,workloads")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grids for fig2/fleet")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -148,6 +148,28 @@ def main() -> None:
             bench[f"{prefix}_cells_per_sec"] = len(rd) / min(walls)
         if not args.smoke:
             summary["dvfs_headline"] = fig_dvfs.headline(rd)
+
+    if "workloads" in only:
+        from . import workloads as workloads_bench
+        wrec = workloads_bench.run(smoke=args.smoke,
+                                   warm=args.json is not None)
+        prefix = "workloads_smoke" if args.smoke else "workloads"
+        bench[f"{prefix}_wall_s"] = wrec["wall_s"]
+        # One gate-metric name across smoke/full (only the smoke record
+        # feeds the baseline, so scales never mix).
+        bench["http_requests_per_sec"] = wrec["http_requests_per_sec"]
+        # Deliberately NOT a _per_sec suffix: the SLO-violation rate is a
+        # workload property (informational trajectory data), never
+        # perf-gated and never copied into the baseline by --rebaseline.
+        bench["workloads_slo_violation_rate"] = wrec["slo_violation_rate"]
+        reports[prefix] = wrec["report"]
+        reports[f"{prefix}_logfit"] = wrec["logfit_report"]
+        summary["workloads"] = {
+            "requests": wrec["requests"],
+            "completed": wrec["completed"],
+            "slo_violation_rate": wrec["slo_violation_rate"],
+            "churn": wrec["churn"],
+        }
 
     if "learn" in only:
         from . import learn as learn_bench

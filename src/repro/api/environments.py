@@ -48,7 +48,11 @@ Built-in variants:
     race-to-idle vs pace-to-deadline idle accounting.  Degenerates to the
     reference bit-exactly with matched flat tables
     (``DvfsEnergyModel.matched``), and its network half carries a native
-    ``step_arrays`` lowering for the flat executors.
+    ``step_arrays`` lowering for the flat executors;
+  * ``logfit`` — network parameters fitted from a historical per-transfer
+    log (``repro.workloads.logfit``): a piecewise-constant bandwidth
+    schedule (plus optional fitted RTT) driving the reference physics,
+    ``make_environment("logfit", log=...)``.
 """
 from __future__ import annotations
 
@@ -447,6 +451,16 @@ register_environment(
     "dvfs",
     lambda **kw: Environment(network=DvfsNetworkModel(),
                              energy=DvfsEnergyModel.for_tech(**kw)))
+
+
+def _logfit_environment(**kwargs):
+    # Lazy: repro.workloads.logfit imports this module for Environment, so
+    # the factory defers the reverse import until first use.
+    from repro.workloads.logfit import logfit_environment
+    return logfit_environment(**kwargs)
+
+
+register_environment("logfit", _logfit_environment)
 
 
 def as_environment(obj=None) -> Environment:

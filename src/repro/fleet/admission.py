@@ -18,7 +18,12 @@ implementation both call:
 * :func:`budget_steps` — the per-transfer tick budget (``total_s``
   quantized to whole ticks);
 * :func:`make_transfer` — the retirement record (completion test, duration,
-  frozen energy/bytes counters) read off a lane's flat f32 state row.
+  frozen energy/bytes counters) read off a lane's flat f32 state row;
+* :func:`resume_request` — the requeue spec for a lane killed by fault
+  injection (``repro.workloads.faults``): under ``restart="resume"`` the
+  new request re-offers exactly the per-partition float32 remainders read
+  off the killed lane's state row (so byte conservation telescopes
+  bit-exactly), under ``restart="scratch"`` the original datasets.
 
 Because both loops share these functions *and* the engine wave runners, a
 trace executed online (with capacity/watermarks large enough never to bind)
@@ -28,6 +33,8 @@ regression pinning the offline path to its pre-refactor numbers.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from typing import Optional, Sequence
 
 import jax
@@ -56,7 +63,8 @@ class Combo:
     """
 
     __slots__ = ("inputs", "state0", "params_row", "f0", "i0", "key",
-                 "ctrl_name", "env", "n_partitions", "ideal_s")
+                 "ctrl_name", "env", "n_partitions", "ideal_s", "specs",
+                 "offered_parts")
 
     def __init__(self, req: TransferRequest, host: Host, dt: float):
         ctrl = as_controller(req.controller)
@@ -76,6 +84,12 @@ class Combo:
                     ctrl_stride(ctrl, dt))
         self.ctrl_name = ctrl.name
         self.n_partitions = len(ci.specs)
+        # The controller's partition specs and their float32 offered bytes
+        # (as packed into the state row) — what resume_request and the
+        # churn ledger read at kill/retire time.
+        self.specs = tuple(ci.specs)
+        self.offered_parts = np.asarray(self.inputs.total_mb,
+                                        np.float32).ravel().copy()
         total_mb = float(np.sum(self.inputs.total_mb))
         self.ideal_s = total_mb / max(req.profile.bandwidth_mbps, 1e-9)
 
@@ -106,10 +120,16 @@ def combo_key(req: TransferRequest, host: Host) -> tuple:
 
 def pick_host(req: TransferRequest, hosts: Sequence[Host],
               active: Sequence[int], assignment: str,
-              rr: list) -> Optional[int]:
-    """Host index for an admission, or None when no slot is free."""
+              rr: list, down: frozenset = frozenset()) -> Optional[int]:
+    """Host index for an admission, or None when no slot is free.
+
+    ``down`` is the set of host indices currently lost to fault injection
+    (``FaultSchedule.down_hosts``): they accept no admissions, and a
+    request pinned to a down host waits in the queue until it returns.
+    """
     def free(i):
-        return hosts[i].slots == 0 or active[i] < hosts[i].slots
+        return (i not in down
+                and (hosts[i].slots == 0 or active[i] < hosts[i].slots))
 
     if req.host is not None:
         if not 0 <= req.host < len(hosts):
@@ -130,10 +150,15 @@ def pick_host(req: TransferRequest, hosts: Sequence[Host],
     return None
 
 
-def nic_shares(hosts: Sequence[Host], demand: Sequence[float]) -> list:
+def nic_shares(hosts: Sequence[Host], demand: Sequence[float],
+               caps: Optional[Sequence[float]] = None) -> list:
     """Per-host NIC contention: proportional rescale when the per-flow
-    demands of a host's in-flight transfers exceed its NIC."""
-    return [min(1.0, hosts[i].nic_mbps / d) if d > 0 else 1.0
+    demands of a host's in-flight transfers exceed its NIC.  ``caps``
+    overrides the per-host NIC capacity (fault-injected degrade windows,
+    ``FaultSchedule.nic_caps``); None keeps the hosts' nominal NICs."""
+    if caps is None:
+        caps = [h.nic_mbps for h in hosts]
+    return [min(1.0, caps[i] / d) if d > 0 else 1.0
             for i, d in enumerate(demand)]
 
 
@@ -171,3 +196,38 @@ def make_transfer(lay: tickstate.TickLayout, f32, *, name: str,
         completed=completed,
         ideal_s=ideal_s,
     )
+
+
+def resume_request(req: TransferRequest, name: str, specs,
+                   remaining, *, restart: str) -> Optional[TransferRequest]:
+    """Requeue spec for a lane killed by fault injection, or None when
+    nothing remains to transfer.
+
+    ``specs`` are the killed lane's partition specs (``Combo.specs`` — the
+    controller's chunking, not the raw request datasets) and ``remaining``
+    the per-partition float32 leftovers read off its state row.  Under
+    ``restart="resume"`` the new request carries one dataset per partition
+    with bytes left, each offering *exactly* the float32 remainder — the
+    engine re-packs ``total_mb`` through float32, so the value round-trips
+    unchanged and byte conservation telescopes bit-exactly.  Under
+    ``restart="scratch"`` the original datasets are re-offered whole.
+
+    Either way the requeued request keeps the original ``arrival_s`` (so
+    its eventual response time spans the restart — restarts hurt latency
+    SLOs, as they should), the resolved ``name`` (kill events target it),
+    the controller, the budget, and any host pin; ``attempt`` increments.
+    """
+    if restart == "scratch":
+        return dataclasses.replace(req, name=name, attempt=req.attempt + 1)
+    remaining = np.asarray(remaining, np.float32).ravel()
+    out = []
+    for spec, rem in zip(specs, remaining):
+        rem = float(rem)
+        if rem <= 0.0:
+            continue
+        files = max(1, int(math.ceil(rem / max(spec.avg_file_mb, 1e-9))))
+        out.append(dataclasses.replace(spec, num_files=files, total_mb=rem))
+    if not out:
+        return None
+    return dataclasses.replace(req, name=name, datasets=tuple(out),
+                               attempt=req.attempt + 1)

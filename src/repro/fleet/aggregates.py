@@ -93,6 +93,8 @@ class FleetReport:
     wave_s: float
     dt: float
     dropped: int = 0                # requests never admitted (horizon cut)
+    slo_s: Optional[float] = None   # per-request latency SLO (None: untracked)
+    churn: Optional[dict] = None    # ChurnFold.report() (None: no faults)
 
     # ------------------------------------------------------------ totals --
 
@@ -118,6 +120,26 @@ class FleetReport:
     def slowdowns(self) -> dict:
         return _percentiles([t.slowdown for t in self.transfers
                              if t.completed])
+
+    # ----------------------------------------------------- latency / SLO --
+
+    def latencies(self) -> dict:
+        """p50/p95/p99 of completed transfers' response time (queue wait +
+        duration, spanning fault restarts)."""
+        return _percentiles([t.response_s for t in self.transfers
+                             if t.completed])
+
+    def slo_violations(self) -> int:
+        """Requests that missed the latency SLO.  A transfer that never
+        completed violated it by definition — an unserved request is worse
+        than a slow one, not invisible."""
+        if self.slo_s is None:
+            raise ValueError("no SLO configured (run with slo_s=...)")
+        return sum(1 for t in self.transfers
+                   if not t.completed or t.response_s > self.slo_s)
+
+    def slo_violation_rate(self) -> float:
+        return self.slo_violations() / max(len(self.transfers), 1)
 
     # ------------------------------------------------------- breakdowns --
 
@@ -148,7 +170,7 @@ class FleetReport:
         return out
 
     def summary(self) -> dict:
-        return {
+        out = {
             "transfers": len(self.transfers),
             "completed": self.completed,
             "dropped": self.dropped,
@@ -164,6 +186,16 @@ class FleetReport:
             "host_nic_util": {h.name: h.nic_util for h in self.host_stats},
             "by_controller": self.by_controller(),
         }
+        # Additive blocks only — fault-free, SLO-free runs keep the exact
+        # pre-workloads summary (golden-pinned in tests/test_fleet.py).
+        if self.slo_s is not None:
+            out["latency"] = self.latencies()
+            out["slo"] = {"slo_s": self.slo_s,
+                          "violations": self.slo_violations(),
+                          "violation_rate": self.slo_violation_rate()}
+        if self.churn is not None:
+            out["churn"] = dict(self.churn)
+        return out
 
     def to_json(self, path: Optional[str] = None, **extra) -> str:
         """Serialize ``summary()`` (+ caller extras, e.g. wall-clock) to
@@ -341,15 +373,30 @@ class FleetFold:
     they bit-match the offline ``FleetReport`` of the same transfers.
     Percentile fields come from :class:`QuantileSketch` and carry its
     documented ``rel_err`` relative-error tolerance instead.
+
+    ``slo_s`` arms per-request latency SLO tracking: response-time
+    percentiles stream through a latency sketch (same ``rel_err``
+    tolerance vs the offline ``FleetReport.latencies()``), and the
+    violation *count* — a transfer that missed the SLO or never completed
+    — is an integer, bit-equal to the offline count.
     """
 
-    def __init__(self, rel_err: float = 0.01):
+    def __init__(self, rel_err: float = 0.01,
+                 slo_s: Optional[float] = None):
         self._total = _GroupFold(rel_err)
         self._by_ctrl: dict[str, _GroupFold] = {}
         self._rel_err = rel_err
+        self.slo_s = slo_s
+        self._latency = QuantileSketch(rel_err)
+        self._violations = 0
 
     def add(self, t: FleetTransfer) -> None:
         self._total.add(t)
+        if t.completed:
+            self._latency.add(t.response_s)
+        if self.slo_s is not None and (not t.completed
+                                       or t.response_s > self.slo_s):
+            self._violations += 1
         g = self._by_ctrl.get(t.controller)
         if g is None:
             g = self._by_ctrl[t.controller] = _GroupFold(self._rel_err)
@@ -373,6 +420,17 @@ class FleetFold:
 
     def slowdowns(self) -> dict:
         return self._total.slowdown.percentiles()
+
+    def latencies(self) -> dict:
+        return self._latency.percentiles()
+
+    def slo_violations(self) -> int:
+        if self.slo_s is None:
+            raise ValueError("no SLO configured (FleetFold(slo_s=...))")
+        return self._violations
+
+    def slo_violation_rate(self) -> float:
+        return self.slo_violations() / max(self._total.transfers, 1)
 
     def by_controller(self) -> dict:
         return {name: self._by_ctrl[name].row()
@@ -402,6 +460,7 @@ class OnlineFleetReport:
     dropped: int = 0
     counters: dict = dataclasses.field(default_factory=dict)
     transfers: Optional[tuple] = None   # only when track_transfers=True
+    churn: Optional[dict] = None        # ChurnFold.report() (None: no faults)
 
     @property
     def total_energy_j(self) -> float:
@@ -422,11 +481,24 @@ class OnlineFleetReport:
     def slowdowns(self) -> dict:
         return self.fold.slowdowns()
 
+    @property
+    def slo_s(self) -> Optional[float]:
+        return self.fold.slo_s
+
+    def latencies(self) -> dict:
+        return self.fold.latencies()
+
+    def slo_violations(self) -> int:
+        return self.fold.slo_violations()
+
+    def slo_violation_rate(self) -> float:
+        return self.fold.slo_violation_rate()
+
     def by_controller(self) -> dict:
         return self.fold.by_controller()
 
     def summary(self) -> dict:
-        return {
+        out = {
             "transfers": self.fold.transfers,
             "completed": self.completed,
             "dropped": self.dropped,
@@ -443,6 +515,17 @@ class OnlineFleetReport:
             "by_controller": self.by_controller(),
             "counters": dict(self.counters),
         }
+        # Additive blocks, mirroring FleetReport.summary: latency
+        # percentiles carry the sketch's rel_err tolerance, the violation
+        # count is bit-exact.
+        if self.slo_s is not None:
+            out["latency"] = self.latencies()
+            out["slo"] = {"slo_s": self.slo_s,
+                          "violations": self.slo_violations(),
+                          "violation_rate": self.slo_violation_rate()}
+        if self.churn is not None:
+            out["churn"] = dict(self.churn)
+        return out
 
     def to_json(self, path: Optional[str] = None, **extra) -> str:
         payload = dict(self.summary(), **extra)

@@ -56,7 +56,9 @@ class TransferRequest:
     host NIC on top of it is the host's, and contention rescaling happens in
     the scheduler.  ``host`` pins the transfer to a pool index; ``None``
     lets the scheduler assign one.  ``total_s`` is the per-transfer budget
-    (quantized up to a whole number of waves).
+    (quantized up to a whole number of waves).  ``attempt`` counts
+    restarts: 0 for a fresh arrival, incremented each time fault injection
+    requeues the transfer (``repro.fleet.admission.resume_request``).
     """
 
     arrival_s: float
@@ -66,6 +68,7 @@ class TransferRequest:
     host: Optional[int] = None
     name: Optional[str] = None
     total_s: float = 3600.0
+    attempt: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "datasets", tuple(self.datasets))
@@ -94,7 +97,8 @@ def request_sort_key(req: TransferRequest) -> tuple:
                    s.std_file_mb) for s in req.datasets),
             dataclasses.astuple(req.profile),
             req.total_s,
-            -1 if req.host is None else req.host)
+            -1 if req.host is None else req.host,
+            req.attempt)
 
 
 def poisson_trace(*, rate_per_s: float, n_transfers: int,
@@ -197,9 +201,14 @@ def poisson_stream(*, rate_per_s: float, datasets: Sequence[tuple],
     Note: per-item rng consumption differs from ``poisson_trace``'s
     vectorized draws, so the same seed yields a *different* workload than
     the trace constructor — both deterministic, not interchangeable.
+
+    ``rate_per_s == 0`` is the empty stream (no arrivals ever), so rate
+    sweeps can include the idle endpoint without special-casing.
     """
-    if rate_per_s <= 0:
-        raise ValueError(f"rate_per_s must be positive, got {rate_per_s}")
+    if rate_per_s < 0:
+        raise ValueError(f"rate_per_s must be >= 0, got {rate_per_s}")
+    if rate_per_s == 0:
+        return
     datasets = tuple(tuple(d) for d in datasets)
     controllers = tuple(controllers)
     rng = np.random.default_rng(seed)
@@ -228,11 +237,17 @@ def diurnal_stream(*, base_rate_per_s: float, peak_rate_per_s: float,
     Sampled by Lewis–Shedler thinning against ``peak_rate_per_s``:
     candidate arrivals are drawn at the peak rate and kept with probability
     ``rate(t)/peak``, which is exact for any bounded rate function and
-    stays O(1) memory.
+    stays O(1) memory.  ``base == peak`` degenerates to a plain Poisson
+    stream (flat profile, every candidate kept) and ``base == 0`` gives
+    troughs with no arrivals at all — both valid endpoints of a diurnal
+    sweep.
     """
-    if not 0.0 < base_rate_per_s <= peak_rate_per_s:
-        raise ValueError(f"need 0 < base <= peak, got base="
+    if not 0.0 <= base_rate_per_s <= peak_rate_per_s:
+        raise ValueError(f"need 0 <= base <= peak, got base="
                          f"{base_rate_per_s}, peak={peak_rate_per_s}")
+    if peak_rate_per_s <= 0:
+        raise ValueError(f"peak_rate_per_s must be positive, got "
+                         f"{peak_rate_per_s}")
     if period_s <= 0:
         raise ValueError(f"period_s must be positive, got {period_s}")
     datasets = tuple(tuple(d) for d in datasets)

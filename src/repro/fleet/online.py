@@ -63,7 +63,7 @@ from repro.core import engine, tickstate
 from repro.distributed.sharding import MeshConfig
 
 from .admission import (Combo, budget_steps, combo_key, make_transfer,
-                        nic_shares, pick_host)
+                        nic_shares, pick_host, resume_request)
 from .aggregates import FleetFold, HostStats, OnlineFleetReport
 from .arrivals import TransferRequest, replay_stream
 from .hosts import Host
@@ -107,6 +107,13 @@ class OnlineConfig:
       (queue depth, in-flight, admit/retire counts, recycled slots) for
       live observability; totals/peaks land in the report's ``counters``
       payload regardless.
+    * ``faults`` — a :class:`repro.workloads.faults.FaultSchedule` (host
+      loss / NIC degradation / transfer kills) applied between waves at
+      the same loop point as the offline scheduler, with killed transfers
+      requeued through the shared ``resume_request`` path; adds a
+      ``churn`` block to the report.
+    * ``slo_s`` — per-request latency SLO: arms the fold's latency sketch
+      and violation counter (``latency`` + ``slo`` summary blocks).
     """
 
     wave_s: float = 30.0
@@ -122,6 +129,8 @@ class OnlineConfig:
     track_transfers: bool = False
     rel_err: float = 0.01
     on_wave: Optional[Callable] = None
+    faults: Optional[object] = None
+    slo_s: Optional[float] = None
 
     def __post_init__(self):
         if self.pool_capacity < 1:
@@ -241,8 +250,11 @@ def run_fleet_online(stream: Iterable[TransferRequest],
             donate=True)
 
     pools: dict[tuple, SlotPool] = {}
-    fold = FleetFold(rel_err=cfg.rel_err)
+    fold = FleetFold(rel_err=cfg.rel_err, slo_s=cfg.slo_s)
     tracked: Optional[list] = [] if cfg.track_transfers else None
+    faults = cfg.faults
+    churn = faults.churn_fold() if faults is not None else None
+    last_fault_s = -math.inf
 
     active = [0] * len(hosts)
     busy_waves = [0] * len(hosts)
@@ -264,9 +276,10 @@ def run_fleet_online(stream: Iterable[TransferRequest],
 
     def fold_transfer(pool: SlotPool, slot: int) -> None:
         h = int(pool.host_idx[slot])
+        name = pool.names[slot]
         t = make_transfer(
             lay, pool.f32[slot],
-            name=pool.names[slot],
+            name=name,
             controller=pool.ctrl_names[slot],
             host=hosts[h].name,
             arrival_s=float(pool.arrival_s[slot]),
@@ -277,6 +290,12 @@ def run_fleet_online(stream: Iterable[TransferRequest],
             ideal_s=float(pool.ideal_s[slot]),
         )
         fold.add(t)
+        if churn is not None:
+            churn.retire(name, attempt=pool.reqs[slot].attempt,
+                         completed=t.completed,
+                         offered_parts=pool.combos[slot].offered_parts,
+                         remaining_parts=pool.f32[slot, :lay.n_partitions],
+                         energy_j=t.energy_j)
         if tracked is not None:
             tracked.append(t)
         active[h] -= 1
@@ -300,11 +319,44 @@ def run_fleet_online(stream: Iterable[TransferRequest],
                 paused = True
         peak_queue = max(peak_queue, len(waiting))
 
+        # -- faults (same loop point and victim order as offline) ------ --
+        down = frozenset()
+        if faults is not None:
+            down = faults.down_hosts(now, now + wave_s)
+            kill_names = faults.kills_in(last_fault_s, now)
+            last_fault_s = now
+            victims = []
+            for pool in pools.values():
+                for slot in pool.active_slots():
+                    slot = int(slot)
+                    h = int(pool.host_idx[slot])
+                    name = pool.names[slot]
+                    if h in down:
+                        victims.append((name, "host", pool, slot))
+                    elif name in kill_names:
+                        victims.append((name, "kill", pool, slot))
+            victims.sort(key=lambda v: v[0])
+            for name, kind, pool, slot in victims:
+                req = pool.reqs[slot]
+                combo = pool.combos[slot]
+                rem = pool.f32[slot, :lay.n_partitions].copy()
+                requeue = resume_request(req, name, combo.specs, rem,
+                                         restart=faults.restart)
+                churn.kill(name, kind=kind, attempt=req.attempt,
+                           offered_parts=combo.offered_parts,
+                           remaining_parts=rem,
+                           energy_j=float(lay.energy_j(pool.f32[slot])),
+                           requeued=requeue is not None)
+                if requeue is not None:
+                    waiting.append(requeue)
+                active[int(pool.host_idx[slot])] -= 1
+                pool.release(slot)
+
         # -- admit (FIFO, shared policy, slot from the group's pool) -- --
         admitted = 0
         still = []
         for req in waiting:
-            h = pick_host(req, hosts, active, cfg.assignment, rr)
+            h = pick_host(req, hosts, active, cfg.assignment, rr, down)
             if h is None:
                 still.append(req)
                 continue
@@ -327,6 +379,8 @@ def run_fleet_online(stream: Iterable[TransferRequest],
             pool.demand_mbps[slot] = req.profile.bandwidth_mbps
             pool.names[slot] = req.name or f"xfer-{seq}"
             pool.ctrl_names[slot] = combo.ctrl_name
+            pool.reqs[slot] = req
+            pool.combos[slot] = combo
             seq += 1
             admitted += 1
             active[h] += 1
@@ -354,7 +408,9 @@ def run_fleet_online(stream: Iterable[TransferRequest],
             for slot in pool.active_slots():
                 demand[int(pool.host_idx[slot])] += float(
                     pool.demand_mbps[slot])
-        share = np.asarray(nic_shares(hosts, demand), np.float32)
+        caps = (faults.nic_caps(hosts, now, now + wave_s)
+                if faults is not None else None)
+        share = np.asarray(nic_shares(hosts, demand, caps), np.float32)
 
         # -- run one wave per occupied pool (whole-capacity batches) --- --
         retired = 0
@@ -413,6 +469,8 @@ def run_fleet_online(stream: Iterable[TransferRequest],
             fold_transfer(pool, int(slot))
             pool.release(int(slot))
     dropped = len(waiting)
+    if churn is not None:
+        churn.finalize()
 
     if tracked is not None:
         tracked.sort(key=lambda t: (t.start_s, t.name))
@@ -445,4 +503,5 @@ def run_fleet_online(stream: Iterable[TransferRequest],
     return OnlineFleetReport(
         fold=fold, host_stats=stats, sim_s=wave * wave_s, waves=waves_run,
         wave_s=wave_s, dt=dt, dropped=dropped, counters=counters,
-        transfers=tuple(tracked) if tracked is not None else None)
+        transfers=tuple(tracked) if tracked is not None else None,
+        churn=churn.report() if churn is not None else None)

@@ -45,9 +45,9 @@ class SlotPool:
     __slots__ = ("capacity", "layout", "params", "bw", "f32", "i32",
                  "steps_done", "done_at", "budget", "host_idx", "start_s",
                  "arrival_s", "ideal_s", "demand_mbps", "names",
-                 "ctrl_names", "_active", "_free", "_free_head",
-                 "_free_tail", "in_flight", "peak_in_flight", "recycled",
-                 "total_allocs")
+                 "ctrl_names", "reqs", "combos", "_active", "_free",
+                 "_free_head", "_free_tail", "in_flight", "peak_in_flight",
+                 "recycled", "total_allocs")
 
     def __init__(self, capacity: int, layout: tickstate.TickLayout):
         if capacity < 1:
@@ -69,6 +69,12 @@ class SlotPool:
         self.demand_mbps = np.zeros((c,), np.float64)
         self.names: list = [None] * c
         self.ctrl_names: list = [None] * c
+        # References, not copies: the admitted TransferRequest and its
+        # shared Combo — what fault injection reads to build the requeue
+        # (remaining-bytes resume) and the churn ledger's offered
+        # components.  Still O(capacity) memory.
+        self.reqs: list = [None] * c
+        self.combos: list = [None] * c
         self._active = np.zeros((c,), bool)
         # FIFO free ring: a fixed [capacity] index buffer with head/tail
         # counters (mod capacity).  Freed slots enqueue at the tail, alloc
@@ -123,6 +129,8 @@ class SlotPool:
         self.demand_mbps[slot] = 0.0
         self.names[slot] = None
         self.ctrl_names[slot] = None
+        self.reqs[slot] = None
+        self.combos[slot] = None
         self._free[self._free_tail % self.capacity] = slot
         self._free_tail += 1
         self.in_flight -= 1

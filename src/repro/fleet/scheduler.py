@@ -59,7 +59,7 @@ import numpy as np
 from repro.core import engine, tickstate
 
 from .admission import (Combo, budget_steps, combo_key, make_transfer,
-                        nic_shares, pick_host)
+                        nic_shares, pick_host, resume_request)
 from .aggregates import FleetReport, FleetTransfer, HostStats
 from .arrivals import TransferRequest, request_sort_key
 from .hosts import Host
@@ -167,7 +167,9 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
               horizon_s: Optional[float] = None,
               assignment: str = "least-loaded",
               devices: Optional[Sequence] = None,
-              executor: str = "auto") -> FleetReport:
+              executor: str = "auto",
+              faults=None,
+              slo_s: Optional[float] = None) -> FleetReport:
     """Run an arrival trace against a host pool; see the module docstring.
 
     ``wave_s`` is the scheduling quantum: admissions and bandwidth rescaling
@@ -179,6 +181,16 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     ``executor`` picks the engine lowering for the wave runners (every
     executor is bit-identical; a ``pallas`` resolution falls back to
     ``blocked``, the executor the wave batching is shaped for).
+
+    ``faults`` injects a :class:`repro.workloads.faults.FaultSchedule`
+    (or any object with its five driver methods): host-loss windows kill
+    in-flight lanes and block admission, NIC-degrade windows cap the
+    contention rescale, named kills requeue transfers with their remaining
+    bytes (``restart="resume"``) or from scratch, and the report grows a
+    ``churn`` goodput-vs-throughput block.  ``slo_s`` arms per-request
+    latency SLO tracking (``latency`` percentiles + ``slo`` violation
+    block on the report) — see ``repro.workloads.http``.  Both default to
+    off, leaving the fault-free report bit-identical to previous releases.
     """
     hosts = tuple(hosts)
     if not hosts:
@@ -239,11 +251,14 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
     seq = 0
     wave = 0
     waves_run = 0
+    churn = faults.churn_fold() if faults is not None else None
+    last_fault_s = -math.inf
 
     def retire(ln: _Lane) -> None:
-        results.append(make_transfer(
+        name = ln.req.name or f"xfer-{ln.seq}"
+        rec = make_transfer(
             lay, ln.st_f32,
-            name=ln.req.name or f"xfer-{ln.seq}",
+            name=name,
             controller=ln.combo.ctrl_name,
             host=hosts[ln.host_idx].name,
             arrival_s=ln.req.arrival_s,
@@ -252,7 +267,14 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             done_at=ln.done_at,
             dt=dt,
             ideal_s=ln.combo.ideal_s,
-        ))
+        )
+        results.append(rec)
+        if churn is not None:
+            churn.retire(name, attempt=ln.req.attempt,
+                         completed=rec.completed,
+                         offered_parts=ln.combo.offered_parts,
+                         remaining_parts=ln.st_f32[:lay.n_partitions],
+                         energy_j=rec.energy_j)
         active[ln.host_idx] -= 1
 
     while lanes or waiting or ai < len(reqs):
@@ -262,9 +284,46 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
         while ai < len(reqs) and reqs[ai].arrival_s <= now:
             waiting.append(reqs[ai])
             ai += 1
+
+        # Fault injection at the wave boundary: kill lanes on down hosts
+        # and named-kill victims, requeue what remains via resume_request.
+        # The online loop runs this block at the identical point of its
+        # own iteration (after ingest, before admission), with victims in
+        # the same name-sorted order, so requeue positions — and therefore
+        # every downstream number — match bit-for-bit.
+        down = frozenset()
+        if faults is not None:
+            down = faults.down_hosts(now, now + wave_s)
+            kill_names = faults.kills_in(last_fault_s, now)
+            last_fault_s = now
+            victims = []
+            for ln in lanes:
+                name = ln.req.name or f"xfer-{ln.seq}"
+                if ln.host_idx in down:
+                    victims.append((name, "host", ln))
+                elif name in kill_names:
+                    victims.append((name, "kill", ln))
+            if victims:
+                victims.sort(key=lambda v: v[0])
+                dead = set()
+                for name, kind, ln in victims:
+                    rem = ln.st_f32[:lay.n_partitions]
+                    requeue = resume_request(ln.req, name, ln.combo.specs,
+                                             rem, restart=faults.restart)
+                    churn.kill(name, kind=kind, attempt=ln.req.attempt,
+                               offered_parts=ln.combo.offered_parts,
+                               remaining_parts=rem,
+                               energy_j=float(lay.energy_j(ln.st_f32)),
+                               requeued=requeue is not None)
+                    if requeue is not None:
+                        waiting.append(requeue)
+                    active[ln.host_idx] -= 1
+                    dead.add(id(ln))
+                lanes = [ln for ln in lanes if id(ln) not in dead]
+
         still = []
         for req in waiting:
-            h = pick_host(req, hosts, active, assignment, rr)
+            h = pick_host(req, hosts, active, assignment, rr, down)
             if h is None:
                 still.append(req)
                 continue
@@ -279,17 +338,28 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
         waiting = still
 
         if not lanes:
+            if waiting:
+                # Queued but nothing admissible (fault-downed hosts, or a
+                # request pinned to one): step wave by wave until a host
+                # returns.  Unreachable without faults — an unadmissible
+                # queue implies a full, i.e. busy, host.
+                wave += 1
+                continue
             # Idle gap: jump straight to the wave of the next arrival.
             wave = max(wave + 1,
                        int(math.ceil(reqs[ai].arrival_s / wave_s)))
             continue
 
         # Per-host NIC contention: proportional rescale when the per-flow
-        # demands of a host's in-flight transfers exceed its NIC.
+        # demands of a host's in-flight transfers exceed its NIC (capacity
+        # capped by any fault-injected degrade window overlapping the
+        # coming wave).
         demand = [0.0] * len(hosts)
         for ln in lanes:
             demand[ln.host_idx] += ln.req.profile.bandwidth_mbps
-        share = nic_shares(hosts, demand)
+        caps = (faults.nic_caps(hosts, now, now + wave_s)
+                if faults is not None else None)
+        share = nic_shares(hosts, demand, caps)
 
         moved_before = [lay.bytes_moved(ln.st_f32) for ln in lanes]
         groups: dict[tuple, list[int]] = defaultdict(list)
@@ -336,6 +406,10 @@ def run_fleet(trace: Sequence[TransferRequest], hosts: Sequence[Host], *,
             peak_active=peak[i],
         )
         for i, h in enumerate(hosts))
+    if churn is not None:
+        churn.finalize()
     return FleetReport(transfers=tuple(results), host_stats=stats,
                        sim_s=wave * wave_s, waves=waves_run,
-                       wave_s=wave_s, dt=dt, dropped=dropped)
+                       wave_s=wave_s, dt=dt, dropped=dropped,
+                       slo_s=slo_s,
+                       churn=churn.report() if churn is not None else None)
